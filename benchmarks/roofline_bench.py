@@ -1,0 +1,46 @@
+"""Benchmark: roofline table from the dry-run artifacts (§Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh) with the three roofline terms. If the
+dry-run has not been executed yet, emits a pointer row instead of failing —
+the dry-run takes hours at 512 devices and runs as its own step."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> list:
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline.status", 0,
+                 f"no dry-run artifacts in {DRYRUN_DIR}; run "
+                 "PYTHONPATH=src python -m repro.launch.dryrun first")]
+    ok = failed = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = f"{d['arch']}.{d['shape']}.{d['mesh']}"
+        if d.get("status") != "ok":
+            failed += 1
+            rows.append((f"roofline.{tag}.status", 0,
+                         d.get("error", "?")[:80]))
+            continue
+        ok += 1
+        r = d["roofline"]
+        rows.append((f"roofline.{tag}.compute_ms",
+                     round(r["compute_s"] * 1e3, 4), ""))
+        rows.append((f"roofline.{tag}.memory_ms",
+                     round(r["memory_s"] * 1e3, 4), ""))
+        rows.append((f"roofline.{tag}.collective_ms",
+                     round(r["collective_s"] * 1e3, 4),
+                     f"dominant={r['dominant']}"))
+        rows.append((f"roofline.{tag}.useful_ratio",
+                     round(r["useful_ratio"], 3),
+                     f"model_flops/hlo_flops"))
+    rows.append(("roofline.cells_ok", ok, f"failed={failed}"))
+    return rows

@@ -1,0 +1,47 @@
+# One function per paper table. Prints ``name,value,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  complexity_tables — Tables I & II (analytic vs XLA-counted flops)
+  table_vi          — Table VI pruning sweep (MACs / size / latency model)
+  perf_model_bench  — Table III cycle model + Table V/VII normalized latency
+  latency           — Fig. 9/10 analog measured on this host (real JAX fwd)
+  roofline_bench    — §Roofline table from the dry-run artifacts
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [module ...]``
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+MODULES = ["complexity_tables", "table_vi", "perf_model_bench", "latency",
+           "roofline_bench"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or MODULES
+    print("name,value,derived")
+    failures = 0
+    for name in want:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,1,\"{type(e).__name__}: {e}\"")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for row in rows:
+            n, v, derived = row
+            d = str(derived).replace(",", ";")
+            print(f"{n},{v},\"{d}\"")
+        print(f"{name}.wall_s,{time.time()-t0:.1f},\"\"")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Serving with dynamic KV-cache pruning — the paper's token scoring
+adapted to autoregressive decode (beyond-paper extension, DESIGN.md §5).
+
+Serves the same batch twice (full cache vs 50% pruned cache) and reports
+agreement of the generated tokens plus the cache-size saving.
+
+Run: PYTHONPATH=src python examples/serve_kv_pruned.py
+"""
+import numpy as np
+
+from repro.launch.serve import serve
+
+
+def main():
+    kw = dict(arch="qwen3-14b", num_requests=4, prompt_len=24, max_new=12)
+    full = serve(**kw, kv_prune=1.0)
+    pruned = serve(**kw, kv_prune=0.5)
+
+    agree = total = 0
+    for uid in full["outputs"]:
+        a, b = full["outputs"][uid], pruned["outputs"][uid]
+        agree += sum(x == y for x, y in zip(a, b))
+        total += len(a)
+    print(f"full cache    : {full['tokens_per_s']:.1f} tok/s")
+    print(f"pruned (50%)  : {pruned['tokens_per_s']:.1f} tok/s")
+    print(f"token agreement under 50% KV pruning: {agree}/{total} "
+          f"({agree/total:.0%}) — high-mass tokens carry the prediction")
+    print("cache memory: 0.5x of full (by construction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end training driver: train a reduced LM for a few hundred steps
+with checkpointing + fault-tolerant restart, optionally with the paper's
+block weight pruning active.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--arch minitron-4b]
+     [--steps 300] [--prune]
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--prune", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_")
+    print(f"training {args.arch} (reduced) for {args.steps} steps; "
+          f"checkpoints -> {ckpt}")
+    out = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                lr=1e-3, ckpt_dir=ckpt, prune=args.prune,
+                checkpoint_every=50)
+    events = [k for _, k in out["events"]]
+    print(f"done: restarts={out['restarts']} "
+          f"checkpoints={events.count('checkpoint')}")
+
+
+if __name__ == "__main__":
+    main()

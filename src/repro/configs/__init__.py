@@ -1,0 +1,64 @@
+"""Config registry: ``get_config("<arch-id>")`` and the assigned shape grid."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .base import ModelConfig, PruningConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME
+from .archs import (
+    ALL_ARCHS,
+    DEIT_SMALL,
+    COMMAND_R_PLUS_104B,
+    QWEN3_14B,
+    MINITRON_4B,
+    STABLELM_1_6B,
+    QWEN2_MOE_A2_7B,
+    GRANITE_MOE_3B_A800M,
+    LLAMA_3_2_VISION_90B,
+    WHISPER_BASE,
+    ZAMBA2_1_2B,
+    RWKV6_1_6B,
+)
+
+_REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in ALL_ARCHS}
+_REGISTRY[DEIT_SMALL.name] = DEIT_SMALL
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def list_archs(include_vit: bool = False) -> List[str]:
+    names = [c.name for c in ALL_ARCHS]
+    if include_vit:
+        names.append(DEIT_SMALL.name)
+    return names
+
+
+def grid_cells(arch: str | None = None) -> List[Tuple[ModelConfig, ShapeConfig]]:
+    """The assigned (arch x shape) grid, with per-arch skips applied."""
+    cells = []
+    archs = [get_config(arch)] if arch else list(ALL_ARCHS)
+    for cfg in archs:
+        for shape in SHAPES:
+            if shape.name in cfg.skip_shapes:
+                continue
+            cells.append((cfg, shape))
+    return cells
+
+
+__all__ = [
+    "ModelConfig",
+    "PruningConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "get_config",
+    "list_archs",
+    "grid_cells",
+    "ALL_ARCHS",
+    "DEIT_SMALL",
+]

@@ -1,0 +1,4 @@
+"""Config module for --arch deit-small."""
+from .archs import DEIT_SMALL as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch granite-moe-3b-a800m."""
+from .archs import GRANITE_MOE_3B_A800M as CONFIG
+
+__all__ = ["CONFIG"]

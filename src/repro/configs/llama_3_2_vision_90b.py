@@ -1,0 +1,4 @@
+"""Config module for --arch llama-3-2-vision-90b."""
+from .archs import LLAMA_3_2_VISION_90B as CONFIG
+
+__all__ = ["CONFIG"]

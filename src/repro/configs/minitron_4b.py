@@ -1,0 +1,4 @@
+"""Config module for --arch minitron-4b."""
+from .archs import MINITRON_4B as CONFIG
+
+__all__ = ["CONFIG"]

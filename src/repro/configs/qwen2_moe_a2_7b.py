@@ -1,0 +1,4 @@
+"""Config module for --arch qwen2-moe-a2-7b."""
+from .archs import QWEN2_MOE_A2_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch qwen3-14b."""
+from .archs import QWEN3_14B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch rwkv6-1-6b."""
+from .archs import RWKV6_1_6B as CONFIG
+
+__all__ = ["CONFIG"]

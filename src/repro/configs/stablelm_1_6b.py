@@ -1,0 +1,4 @@
+"""Config module for --arch stablelm-1-6b."""
+from .archs import STABLELM_1_6B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch whisper-base."""
+from .archs import WHISPER_BASE as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch zamba2-1-2b."""
+from .archs import ZAMBA2_1_2B as CONFIG
+
+__all__ = ["CONFIG"]

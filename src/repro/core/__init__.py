@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — simultaneous static block weight pruning
+and dynamic token pruning, plus the analytic models used for validation."""
+from repro.core import block_pruning, token_pruning, packing, schedule
+from repro.core import complexity, perf_model, simultaneous
+
+__all__ = [
+    "block_pruning",
+    "token_pruning",
+    "packing",
+    "schedule",
+    "complexity",
+    "perf_model",
+    "simultaneous",
+]

@@ -1,0 +1,198 @@
+"""Static block weight pruning (paper §IV-A).
+
+Every prunable weight ``W ∈ R^{M1×M2}`` owns a learnable score matrix
+``S ∈ R^{⌈M1/b⌉×⌈M2/b⌉}`` (one score per ``b×b`` block). The binary mask is
+built by global top-k selection over ``S`` (keep rate ``r_b``) and applied as
+``W ⊙ M``. Gradients flow to ``S`` through a straight-through estimator (STE)
+that ignores the non-differentiable top-k (movement-pruning style [17]):
+
+    forward :  M = 1[S ∈ top-k(S)]
+    backward:  dL/dS_ij = Σ_{(u,v) ∈ block ij} dL/d(W⊙M)_uv · W_uv
+
+MLP weights are pruned by whole columns (``W_int``) / rows (``W_out``) via
+score *vectors* (paper Fig. 3); MSA weights use 2-D block scores with the
+*alternate pattern* tying ``W_p`` column structure to ``W_proj`` row structure
+(paper Fig. 2).
+
+The sparsity regularizer (Eq. 8) is ``λ · Σ σ(S)`` summed over all scores.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# STE top-k mask
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def ste_topk_mask(scores: jax.Array, keep: int) -> jax.Array:
+    """Binary mask keeping the ``keep`` largest entries of ``scores``.
+
+    Straight-through: backward passes the cotangent through unchanged, i.e.
+    the top-k selection is treated as identity for gradient purposes.
+    """
+    return _hard_topk(scores, keep)
+
+
+def _hard_topk(scores: jax.Array, keep: int) -> jax.Array:
+    flat = scores.reshape(-1)
+    keep = int(keep)
+    if keep >= flat.shape[0]:
+        return jnp.ones_like(scores)
+    if keep <= 0:
+        return jnp.zeros_like(scores)
+    # threshold = keep-th largest value; ties broken toward keeping more.
+    kth = jax.lax.top_k(flat, keep)[0][-1]
+    return (scores >= kth).astype(scores.dtype)
+
+
+def _ste_fwd(scores, keep):
+    return _hard_topk(scores, keep), None
+
+
+def _ste_bwd(_, g):
+    return (g, None)
+
+
+ste_topk_mask.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Block geometry
+# ---------------------------------------------------------------------------
+def score_shape(w_shape: Tuple[int, int], block_size: int) -> Tuple[int, int]:
+    m1, m2 = w_shape
+    b = block_size
+    return (math.ceil(m1 / b), math.ceil(m2 / b))
+
+
+def expand_block_mask(block_mask: jax.Array, w_shape: Tuple[int, int],
+                      block_size: int) -> jax.Array:
+    """Expand a (m, n) block mask to a full (M1, M2) element mask."""
+    b = block_size
+    full = jnp.repeat(jnp.repeat(block_mask, b, axis=0), b, axis=1)
+    return full[: w_shape[0], : w_shape[1]]
+
+
+def num_kept_blocks(w_shape: Tuple[int, int], block_size: int, r_b: float) -> int:
+    m, n = score_shape(w_shape, block_size)
+    return max(1, math.ceil(m * n * r_b))
+
+
+# ---------------------------------------------------------------------------
+# Masked weights
+# ---------------------------------------------------------------------------
+def masked_weight(w: jax.Array, scores: jax.Array, r_b: float,
+                  block_size: int) -> jax.Array:
+    """``W ⊙ M`` with the STE mask derived from block ``scores``.
+
+    ``scores`` has shape ``score_shape(w.shape, block_size)``.
+    """
+    if r_b >= 1.0:
+        return w
+    keep = num_kept_blocks(w.shape, block_size, r_b)
+    bm = ste_topk_mask(scores, keep)
+    full = expand_block_mask(bm, w.shape, block_size)
+    return w * full.astype(w.dtype)
+
+
+def masked_weight_vector(w: jax.Array, scores: jax.Array, r_b: float,
+                         axis: int) -> jax.Array:
+    """MLP column/row pruning (paper Fig. 3).
+
+    ``scores`` is a vector of length ``w.shape[axis]``; whole columns
+    (``axis=1``, for W_int) or rows (``axis=0``, for W_out) are pruned via
+    top-k on the score vector.
+    """
+    if r_b >= 1.0:
+        return w
+    n = w.shape[axis]
+    keep = max(1, math.ceil(n * r_b))
+    m = ste_topk_mask(scores, keep)
+    shape = [1, 1]
+    shape[axis] = n
+    return w * m.reshape(shape).astype(w.dtype)
+
+
+def alternate_tie_mask(block_mask_p: jax.Array) -> jax.Array:
+    """Alternate pattern (paper Fig. 2): the column-block keep pattern of a
+    ``W_p`` (``D × H·D'``, blocks ``m × n``) determines the row-block keep
+    pattern of ``W_proj`` (``H·D' × D``, blocks ``n × m'``): a fully pruned
+    ``W_p`` block-column makes the corresponding ``W_proj`` block-row
+    redundant. Returns a per-block-row keep vector of length ``n``."""
+    return (block_mask_p.sum(axis=0) > 0).astype(block_mask_p.dtype)
+
+
+def head_retained_ratio(block_mask_p: jax.Array, heads: int) -> jax.Array:
+    """Fraction of heads with at least one surviving block column
+    (paper Table VI "Head Retained Ratio")."""
+    n = block_mask_p.shape[1]
+    per_head = block_mask_p.reshape(block_mask_p.shape[0], heads, n // heads)
+    alive = (per_head.sum(axis=(0, 2)) > 0)
+    return alive.mean()
+
+
+# ---------------------------------------------------------------------------
+# Score parameter trees
+# ---------------------------------------------------------------------------
+def init_scores_for(w: jax.Array, block_size: int, kind: str,
+                    key: jax.Array) -> jax.Array:
+    """Initialize a score parameter for weight ``w``.
+
+    ``kind``: "block" -> 2-D block scores; "col"/"row" -> score vector for MLP
+    column/row pruning. Small positive init so the cubic schedule starts from
+    an (almost) dense model with meaningful top-k gradients.
+    """
+    if kind == "block":
+        shape = score_shape(w.shape, block_size)
+    elif kind == "col":
+        shape = (w.shape[1],)
+    elif kind == "row":
+        shape = (w.shape[0],)
+    else:
+        raise ValueError(kind)
+    return 0.01 * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def sparsity_regularizer(scores_tree) -> jax.Array:
+    """λ-free Eq. 8 term: ``Σ σ(S)`` over every score tensor in the tree."""
+    leaves = jax.tree_util.tree_leaves(scores_tree)
+    if not leaves:
+        return jnp.float32(0.0)
+    return sum(jax.nn.sigmoid(s).sum() for s in leaves)
+
+
+def apply_pruning_to_param(name: str, w: jax.Array, scores: jax.Array,
+                           r_b: float, block_size: int) -> jax.Array:
+    """Dispatch: MSA-style 2-D block masks vs MLP column/row vectors by the
+    score tensor's rank."""
+    if scores.ndim == 2:
+        return masked_weight(w, scores, r_b, block_size)
+    axis = 1 if name.endswith(("w_int", "wi", "w_in")) else 0
+    return masked_weight_vector(w, scores, r_b, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Measured sparsity (for packing + Table VI reproduction)
+# ---------------------------------------------------------------------------
+def hard_block_mask(scores: jax.Array, r_b: float,
+                    w_shape: Tuple[int, int], block_size: int) -> jax.Array:
+    keep = num_kept_blocks(w_shape, block_size, r_b)
+    return _hard_topk(scores, keep)
+
+
+def density_stats(block_mask: jax.Array) -> Dict[str, float]:
+    """Per-column density statistics used by the load balancer and the
+    analytic complexity model (α in Table II)."""
+    col_counts = block_mask.sum(axis=0)
+    total = block_mask.shape[0]
+    return {
+        "density": float(block_mask.mean()),
+        "alpha": float((col_counts / total).mean()),
+        "max_col": int(col_counts.max()),
+        "min_col": int(col_counts.min()),
+    }

@@ -1,0 +1,112 @@
+"""Packed-model execution — the deployment path of the paper's accelerator.
+
+After simultaneous pruning, ``pack_model`` hardens the masks and converts
+every block-pruned attention weight into the block-compressed SBMM format
+(load-balanced column order included). ``forward_vit_packed`` then runs the
+ViT with those weights executed THROUGH the SBMM kernel — the software
+twin of the MPCA executing the pruned model, validated end-to-end against
+the masked-dense forward (tests/test_packed_runner.py).
+
+MLP column/row-pruned weights stay dense-masked (the paper maps them to
+DBMM — a dense matmul over the shrunken width — which XLA already emits).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packing
+from repro.core import token_pruning as TP
+from repro.kernels.sbmm import sbmm
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import pruning_glue as PG
+
+
+def pack_model(cfg: ModelConfig, params: Dict, scores: Dict,
+               lanes: int = 8) -> Dict[str, packing.PackedWeight]:
+    """Block-compress every masked attention weight. Returns
+    {path: PackedWeight}; paths match pruning_glue.hard_masks keys."""
+    masks = PG.hard_masks(cfg, params, scores)
+    out = {}
+    for path, mask in masks.items():
+        layer_idx = int(path.split("/")[1])
+        leafname = path.split("/")[-1]
+        w = np.asarray(params["layers"][layer_idx]["attn"][leafname],
+                       np.float32)
+        out[path] = packing.pack_weight(
+            w, np.asarray(mask), cfg.pruning.block_size, lanes)
+    return out
+
+
+def forward_vit_packed(cfg: ModelConfig, params: Dict,
+                       packed: Dict[str, packing.PackedWeight],
+                       patches: jax.Array,
+                       use_tdm: bool | None = None) -> M.Output:
+    """ViT forward with attention projections executed via the SBMM kernel
+    (interpret mode on CPU; native Pallas on TPU backends).
+
+    ``params`` should be the MASKED tree (``PG.apply_pruning``) so the
+    MLPs run masked-dense (the paper's DBMM path); the SBMM-packed
+    attention weights carry their masks structurally."""
+    p = cfg.pruning
+    if use_tdm is None:
+        use_tdm = p.token_pruning_enabled
+    adt = jnp.float32  # kernel path runs fp32 end to end
+
+    x = L.linear(patches.astype(adt), params["patch_embed"],
+                 params["patch_bias"])
+    B, N, D = x.shape
+    cls = jnp.broadcast_to(params["cls"].astype(adt), (B, 1, D))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"][None, : N + 1].astype(adt)
+
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    for i, lp in enumerate(params["layers"]):
+        has_tdm = use_tdm and (i in p.tdm_layers)
+        h = L.layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        Bc, Nc, _ = h.shape
+
+        def proj(name, inp):
+            key = f"layers/{i}/attn/{name}"
+            if key in packed:
+                return sbmm(inp, packed[key], tm=64)
+            return L.linear(inp, lp["attn"][name])
+
+        q = (proj("wq", h) + lp["attn"].get("bq", 0.0)).reshape(
+            Bc, Nc, H, Dh)
+        k = (proj("wk", h) + lp["attn"].get("bk", 0.0)).reshape(
+            Bc, Nc, KV, Dh)
+        v = (proj("wv", h) + lp["attn"].get("bv", 0.0)).reshape(
+            Bc, Nc, KV, Dh)
+        o = A.flash_attention_jnp(q, k, v, causal=False)
+        tdm_scores = None
+        if has_tdm:
+            probs = A.attention_probs_row(q[:, 0], k)
+            tdm_scores = probs.mean(axis=1)
+        o = o.reshape(Bc, Nc, H * Dh)
+        attn_out = proj("wo", o) + lp["attn"].get("bo", 0.0)
+        x = x + attn_out
+        if has_tdm:
+            x, _ = TP.tdm(x, tdm_scores, p.r_t, has_cls=True)
+        h = L.layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["mlp"])
+
+    x = L.layer_norm(x, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
+    logits = L.linear(x[:, 0], params["head"])
+    return M.Output(logits.astype(jnp.float32))
+
+
+def masked_dense_reference(cfg: ModelConfig, params: Dict, scores: Dict,
+                           patches: jax.Array,
+                           use_tdm: bool | None = None) -> M.Output:
+    """Oracle: same model with masked-dense weights (fp32 activations to
+    match the kernel path's numerics)."""
+    masked = PG.apply_pruning(cfg, params, scores)
+    cfg32 = cfg.replace(dtype="float32")
+    return M.forward_vit(cfg32, masked, patches, use_tdm=use_tdm)

@@ -1,0 +1,33 @@
+"""Cubic sparsity scheduler (paper §VI, following movement pruning [17]).
+
+``r_b`` is scheduled from full density 1.0 to its final value with a warm-up
+(dense) phase, a cubic decay phase, and a cool-down (constant) phase:
+
+    r(t) = r_f + (1 - r_f) * (1 - (t - t_w) / (T - t_w - t_c))^3
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cubic_keep_rate(step, total_steps: int, final_rate: float,
+                    warmup_steps: int = 0, cooldown_steps: int = 0):
+    """Keep-rate at ``step`` (jnp-traceable)."""
+    t = jnp.asarray(step, jnp.float32)
+    t_w = float(warmup_steps)
+    t_end = float(total_steps - cooldown_steps)
+    span = max(t_end - t_w, 1.0)
+    frac = jnp.clip((t - t_w) / span, 0.0, 1.0)
+    r = final_rate + (1.0 - final_rate) * (1.0 - frac) ** 3
+    return jnp.where(t < t_w, 1.0, jnp.where(t >= t_end, final_rate, r))
+
+
+def linear_warmup_cosine(step, total_steps: int, base_lr: float,
+                         warmup_steps: int = 0, min_lr: float = 0.0):
+    """LR schedule for the fine-pruning runs (AdamW in the paper)."""
+    t = jnp.asarray(step, jnp.float32)
+    warm = base_lr * t / max(warmup_steps, 1)
+    span = max(total_steps - warmup_steps, 1)
+    frac = jnp.clip((t - warmup_steps) / span, 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(t < warmup_steps, warm, cos)

@@ -1,0 +1,113 @@
+"""Dynamic token pruning (paper §IV-B) — the Token Dropping Module (TDM).
+
+Token importance is non-parametric [28]: the attention matrix ``A`` from the
+MSA is aggregated over heads, and the CLS row gives a score per token,
+
+    S = (1/H) Σ_h A_h[cls, :]        S ∈ R^N.
+
+Given keep-rate ``r_t``, the top ``⌈(N−1)·r_t⌉`` non-CLS tokens are retained
+and the inattentive remainder is **fused** into a single token by
+score-weighted aggregation. The CLS token is always kept. Output length is
+therefore ``1 + ⌈(N−1)·r_t⌉ + 1`` — static given (N, r_t), which keeps JAX
+shapes fixed per layer.
+
+Adaptations recorded in DESIGN.md:
+  * LM prefill: the scoring row is the *last* token (the position whose
+    logits matter) instead of CLS.
+  * decode: the same scoring drives dynamic KV-cache pruning
+    (``kv_prune_scores`` below) — a beyond-paper extension.
+  * SSM/hybrid recurrent paths: inapplicable (dropping mid-sequence corrupts
+    recurrent state); those archs run without the TDM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def num_kept_tokens(n_tokens: int, r_t: float, has_cls: bool = True) -> int:
+    """Static retained-token count: CLS + top-k + 1 fused token."""
+    n_body = n_tokens - 1 if has_cls else n_tokens
+    k = max(1, math.ceil(n_body * r_t))
+    return (1 if has_cls else 0) + k + 1  # +1 fused token
+
+
+def token_importance(attn: jax.Array, score_row: int = 0) -> jax.Array:
+    """Aggregate head attention into per-token importance.
+
+    attn: ``[..., H, N_q, N_kv]`` attention probabilities.
+    Returns ``[..., N_kv]`` = mean over heads of row ``score_row``.
+    """
+    return attn[..., :, score_row, :].mean(axis=-2)
+
+
+def tdm(z: jax.Array, scores: jax.Array, r_t: float,
+        has_cls: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Token Dropping Module.
+
+    z      : ``[B, N, D]`` token matrix (CLS at index 0 when ``has_cls``).
+    scores : ``[B, N]`` importance (CLS position ignored when ``has_cls``).
+    Returns ``(z_out [B, N_kept, D], kept_idx [B, k])`` where
+    ``N_kept = num_kept_tokens(N, r_t, has_cls)``.
+    """
+    B, N, D = z.shape
+    n_body = N - 1 if has_cls else N
+    k = max(1, math.ceil(n_body * r_t))
+
+    body = z[:, 1:, :] if has_cls else z
+    s_body = scores[:, 1:] if has_cls else scores
+
+    top_vals, top_idx = jax.lax.top_k(s_body, k)  # [B, k]
+    kept = jnp.take_along_axis(body, top_idx[..., None], axis=1)  # [B,k,D]
+
+    # Fuse the inattentive remainder: weighted aggregation by score (paper).
+    keep_mask = jnp.zeros((B, n_body), dtype=bool)
+    keep_mask = jnp.put_along_axis(keep_mask, top_idx, True, axis=1,
+                                   inplace=False)
+    drop_w = jnp.where(keep_mask, 0.0, s_body.astype(jnp.float32))
+    denom = drop_w.sum(axis=1, keepdims=True) + 1e-9
+    fused = jnp.einsum("bn,bnd->bd", (drop_w / denom).astype(z.dtype), body)
+
+    parts = []
+    if has_cls:
+        parts.append(z[:, :1, :])
+    parts += [kept, fused[:, None, :]]
+    z_out = jnp.concatenate(parts, axis=1)
+    return z_out, top_idx
+
+
+def tdm_reference_unbatched(z: jnp.ndarray, scores: jnp.ndarray, r_t: float,
+                            has_cls: bool = True) -> jnp.ndarray:
+    """Oracle for property tests: direct, unbatched TDM."""
+    out, _ = tdm(z[None], scores[None], r_t, has_cls)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: dynamic KV-cache pruning for decode (SpAtten-style adaptation
+# of the paper's token scoring to autoregressive serving).
+# ---------------------------------------------------------------------------
+def kv_prune_scores(accum_attn: jax.Array, cache_len: int) -> jax.Array:
+    """``accum_attn [B, N_cache]`` is attention mass accumulated over decode
+    steps and heads. Returns the same scores, masked to the valid cache."""
+    n = accum_attn.shape[-1]
+    pos = jnp.arange(n)
+    return jnp.where(pos < cache_len, accum_attn, -jnp.inf)
+
+
+def select_kv_keep(accum_attn: jax.Array, keep: int) -> jax.Array:
+    """Indices of the ``keep`` highest-mass cached tokens. ``keep`` static."""
+    _, idx = jax.lax.top_k(accum_attn, keep)
+    return jnp.sort(idx, axis=-1)  # preserve temporal order for RoPE sanity
+
+
+def compact_kv_cache(k_cache: jax.Array, v_cache: jax.Array,
+                     keep_idx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Gather kept cache entries to the front. Shapes: ``[B, N, H, Dh]``;
+    keep_idx ``[B, keep]``."""
+    gather = lambda c: jnp.take_along_axis(
+        c, keep_idx[:, :, None, None], axis=1)
+    return gather(k_cache), gather(v_cache)

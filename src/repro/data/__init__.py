@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, synthetic_lm_batch,
+                                 synthetic_vit_batch, batches, shard_batch)
+
+__all__ = ["DataConfig", "synthetic_lm_batch", "synthetic_vit_batch",
+           "batches", "shard_batch"]

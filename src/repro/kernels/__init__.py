@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  sbmm            — the paper's Sparse Block-wise Matrix Multiplication
+  token_drop      — fused TDM gather + weighted-fuse (TDHM analog)
+  flash_attention — online-softmax attention (prefill/training)
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, backend selection), ref.py (pure-jnp oracle). All validated in
+interpret mode on CPU; compiled natively on TPU backends.
+"""

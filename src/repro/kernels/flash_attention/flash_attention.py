@@ -1,0 +1,99 @@
+"""Flash attention Pallas kernel (prefill / training path).
+
+Online-softmax attention tiled for VMEM: grid = (heads, Nq/TQ); each cell
+streams Nk/TK key/value tiles, keeping running (max, denom, accumulator) in
+fp32. Causal masking skips nothing structurally (the grid is rectangular)
+but fully-masked tiles contribute zero — the hillclimbed variant bounds the
+kv loop per q tile instead (see ops.py ``causal_bounded``).
+
+MXU alignment: TQ/TK default 128; Dh is the lane dimension (64/128 for all
+assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, tq: int,
+                  tk: int, nk: int, scale: float, q_offset: int,
+                  bounded: bool, kv_valid: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # [TQ, Dh]
+    dh = q.shape[-1]
+
+    q_pos = q_offset + qi * tq + jax.lax.iota(jnp.int32, tq)
+
+    def body(ki, carry):
+        o, m, l = carry
+        k = k_ref[0, pl.dslice(ki * tk, tk)].astype(jnp.float32)  # [TK, Dh]
+        v = v_ref[0, pl.dslice(ki * tk, tk)].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [TQ, TK]
+        k_pos = ki * tk + jax.lax.iota(jnp.int32, tk)
+        mask = k_pos[None, :] < kv_valid  # mask tile padding
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        o_new = o * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((tq, dh), jnp.float32)
+    m0 = jnp.full((tq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+
+    if causal and bounded:
+        # hillclimb: only iterate kv tiles that intersect the causal cone of
+        # this q tile — halves compute for training shapes.
+        last = (q_offset + (qi + 1) * tq + tk - 1) // tk
+        upper = jnp.minimum(nk, last)
+    else:
+        upper = nk
+    o, m, l = jax.lax.fori_loop(0, upper, body, (o0, m0, l0))
+    o_ref[0] = (o / jnp.maximum(l[:, None], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, q_offset: int = 0,
+                           tq: int = 128, tk: int = 128,
+                           scale: float | None = None,
+                           bounded: bool = True,
+                           kv_valid: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q: [H, Nq, Dh]; k, v: [H, Nk, Dh] (same head count — GQA expansion is
+    handled in ops.py). Nq % tq == 0 and Nk % tk == 0 (ops.py pads;
+    ``kv_valid`` masks key padding)."""
+    H, Nq, Dh = q.shape
+    _, Nk, _ = k.shape
+    tq = min(tq, Nq)
+    tk = min(tk, Nk)
+    assert Nq % tq == 0 and Nk % tk == 0
+    if scale is None:
+        scale = Dh ** -0.5
+    nk = Nk // tk
+    if kv_valid is None:
+        kv_valid = Nk
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, tq=tq, tk=tk, nk=nk, scale=scale,
+        q_offset=q_offset, bounded=bounded, kv_valid=kv_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(H, Nq // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, Dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Nk, Dh), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, Nk, Dh), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, Dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Nq, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""Jit'd wrapper: batching, GQA expansion, padding, backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "tq",
+                                             "tk", "bounded", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_offset: int = 0,
+                    tq: int = 128, tk: int = 128, bounded: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]. GQA handled by repeating
+    KV heads (the kernel sees matched head counts)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Nq, Hq, Dh = q.shape
+    _, Nk, KV, _ = k.shape
+    per = Hq // KV
+    if per > 1:
+        k = jnp.repeat(k, per, axis=2)
+        v = jnp.repeat(v, per, axis=2)
+
+    tq_eff = min(tq, Nq)
+    tk_eff = min(tk, Nk)
+    q_pad = (-Nq) % tq_eff
+    k_pad = (-Nk) % tk_eff
+    qh = jnp.moveaxis(q, 2, 1)  # [B, H, Nq, Dh]
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    if q_pad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+
+    run = functools.partial(
+        flash_attention_pallas, causal=causal, q_offset=q_offset,
+        tq=tq_eff, tk=tk_eff, bounded=bounded, kv_valid=Nk,
+        interpret=interpret)
+    out = jax.vmap(run)(qh, kh, vh)
+    out = out[:, :, :Nq]
+    return jnp.moveaxis(out, 1, 2)  # [B, Nq, Hq, Dh]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel: naive full-matrix
+softmax attention in fp32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, q_offset: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q: [H, Nq, Dh]; k, v: [H, Nk, Dh]."""
+    H, Nq, Dh = q.shape
+    Nk = k.shape[1]
+    if scale is None:
+        scale = Dh ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(Nq)
+        mask = q_pos[:, None] >= jnp.arange(Nk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

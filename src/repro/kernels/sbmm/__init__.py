@@ -1,0 +1,4 @@
+from repro.kernels.sbmm.ops import sbmm, sbmm_raw
+from repro.kernels.sbmm.ref import sbmm_ref
+
+__all__ = ["sbmm", "sbmm_raw", "sbmm_ref"]

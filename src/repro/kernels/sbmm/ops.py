@@ -1,0 +1,52 @@
+"""Jit'd public wrapper for the SBMM kernel: padding, permutation handling,
+and backend selection (real Pallas on TPU, interpret mode elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import PackedWeight
+from repro.kernels.sbmm.sbmm import sbmm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def sbmm_raw(x: jax.Array, blocks: jax.Array, header: jax.Array,
+             tm: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Pad rows/cols and run the kernel. x: [M, K_logical]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    C, S, b, _ = blocks.shape
+    M, K = x.shape
+    k_pad = (-K) % b
+    m_pad = (-M) % tm
+    if k_pad or m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, k_pad)))
+    y = sbmm_pallas(x, blocks, header, tm=tm, interpret=interpret)
+    return y[:M]
+
+
+def sbmm(x: jax.Array, packed: PackedWeight, tm: int = 128,
+         interpret: bool | None = None) -> jax.Array:
+    """Full SBMM: y = x @ W_masked, undoing the load-balancing column
+    permutation so callers see logical column order.
+
+    x: [..., M1_any, K]; returns [..., M1_any, M2]."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = sbmm_raw(x2, packed.blocks, packed.header, tm=tm, interpret=interpret)
+    b = packed.block_size
+    m2 = packed.shape[1]
+    # slot pc holds logical column perm[pc] -> scatter back
+    C = packed.n_cols
+    inv = np.empty(C, dtype=np.int64)
+    inv[np.asarray(packed.col_perm)] = np.arange(C)
+    y_blocks = y.reshape(x2.shape[0], C, b)
+    y_logical = y_blocks[:, jnp.asarray(inv), :].reshape(x2.shape[0], C * b)
+    return y_logical[:, :m2].reshape(lead + (m2,))

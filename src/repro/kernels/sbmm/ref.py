@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SBMM kernel: reconstruct the masked dense weight
+from the packed representation and matmul."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def sbmm_ref(x: jnp.ndarray, blocks: jnp.ndarray, header: jnp.ndarray
+             ) -> jnp.ndarray:
+    """x: [M, K]; blocks: [C, S, b, b]; header: [C, S]. y: [M, C·b].
+
+    Direct (slow) reference: scatter blocks into a dense [K, C·b] weight,
+    then one dense matmul in fp32."""
+    M, K = x.shape
+    C, S, b, _ = blocks.shape
+    w = np.zeros((K, C * b), dtype=np.float32)
+    hdr = np.asarray(header)
+    blk = np.asarray(blocks, np.float32)
+    for c in range(C):
+        for s in range(S):
+            r = int(hdr[c, s])
+            if r < 0:
+                continue
+            w[r * b:(r + 1) * b, c * b:(c + 1) * b] = blk[c, s]
+    y = jnp.asarray(np.asarray(x, np.float32) @ w)
+    return y.astype(x.dtype)

@@ -1,0 +1,83 @@
+"""SBMM — Sparse Block-wise Matrix Multiplication Pallas kernel.
+
+TPU-native realization of the paper's MPCA/SBMM (Algorithm 2): a dense
+activation matrix multiplies a block-compressed weight. The weight is stored
+column-major as gathered blocks with a per-column header of surviving
+row-block indices (core/packing.py — the direct analog of the FPGA's CB
+header format).
+
+Mapping onto TPU:
+  * grid = (M/TM, n_block_cols) — rows of the activation strip play the
+    role of the p_t PE rows; block-columns play the p_c lanes (the offline
+    column balancing in packing.py equalizes work across grid columns).
+  * the activation strip [TM, K] is VMEM-resident (the GFB analog); the
+    per-column gathered blocks [max_kept, b, b] stream through VMEM (the CB
+    analog); the header rides in scalar memory (prefetched — SMEM analog).
+  * each header entry drives a dynamic-slice gather of a [TM, b] activation
+    sub-tile feeding the MXU — the hardware "fetch by header index" step.
+  * accumulation is fp32 in registers; @pl.when skips padding entries
+    (idx < 0), which is how load imbalance manifests as *skipped work*
+    rather than wasted MACs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sbmm_kernel(header_ref, x_ref, blocks_ref, y_ref, *, block_size: int,
+                 max_kept: int, tm: int):
+    """One (row-strip, block-column) grid cell.
+
+    header_ref : [n_cols, max_kept] int32 (scalar prefetch)
+    x_ref      : [TM, K]   activation strip (VMEM)
+    blocks_ref : [1, max_kept, b, b] gathered weight blocks for this column
+    y_ref      : [TM, b]   output tile
+    """
+    j = pl.program_id(1)
+    b = block_size
+
+    def body(s, acc):
+        idx = header_ref[j, s]
+        safe = jnp.maximum(idx, 0)
+        x_blk = x_ref[:, pl.dslice(safe * b, b)]          # [TM, b] gather
+        w_blk = blocks_ref[0, s]                           # [b, b]
+        contrib = jnp.dot(x_blk, w_blk,
+                          preferred_element_type=jnp.float32)
+        return acc + jnp.where(idx >= 0, contrib, 0.0)
+
+    acc = jax.lax.fori_loop(
+        0, max_kept, body, jnp.zeros((tm, b), jnp.float32))
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def sbmm_pallas(x: jax.Array, blocks: jax.Array, header: jax.Array,
+                *, tm: int = 128, interpret: bool = True) -> jax.Array:
+    """x: [M, K] (K padded to n_row_blocks·b); blocks: [C, S, b, b];
+    header: [C, S] int32 (-1 padding). Returns y: [M, C·b].
+
+    ``M`` must be a multiple of ``tm`` (ops.py pads)."""
+    M, K = x.shape
+    C, S, b, _ = blocks.shape
+    assert M % tm == 0, (M, tm)
+
+    grid = (M // tm, C)
+    kernel = functools.partial(_sbmm_kernel, block_size=b, max_kept=S, tm=tm)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, K), lambda i, j, hdr: (i, 0)),
+                pl.BlockSpec((1, S, b, b), lambda i, j, hdr: (j, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tm, b), lambda i, j, hdr: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, C * b), x.dtype),
+        interpret=interpret,
+    )(header, x, blocks)

@@ -1,0 +1,4 @@
+from repro.kernels.token_drop.ops import token_drop
+from repro.kernels.token_drop.ref import token_drop_ref
+
+__all__ = ["token_drop", "token_drop_ref"]

@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the token-drop kernel: computes top-k + drop weights
+(the bitonic-sort analog runs as native XLA top_k) and invokes the fused
+gather+reduce kernel. Batched via vmap."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.token_drop.token_drop import token_drop_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("r_t", "has_cls", "td",
+                                             "interpret"))
+def token_drop(z: jax.Array, scores: jax.Array, r_t: float,
+               has_cls: bool = True, td: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Batched TDM via the Pallas kernel.
+
+    z: [B, N, D]; scores: [B, N]. Returns [B, N_kept, D] with
+    N_kept = (1 if cls) + k + 1 (fused)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, N, D = z.shape
+    n_body = N - 1 if has_cls else N
+    k = max(1, math.ceil(n_body * r_t))
+
+    body = z[:, 1:] if has_cls else z
+    s_body = scores[:, 1:] if has_cls else scores
+
+    _, keep_idx = jax.lax.top_k(s_body, k)  # [B, k]
+    keep_mask = jnp.zeros((B, n_body), bool)
+    keep_mask = jnp.put_along_axis(keep_mask, keep_idx, True, axis=1,
+                                   inplace=False)
+    w = jnp.where(keep_mask, 0.0, s_body.astype(jnp.float32))
+    w = w / (w.sum(axis=1, keepdims=True) + 1e-9)
+
+    d_pad = (-D) % td
+    if d_pad:
+        body = jnp.pad(body, ((0, 0), (0, 0), (0, d_pad)))
+
+    run = functools.partial(token_drop_pallas, td=td, interpret=interpret)
+    out = jax.vmap(run)(body, keep_idx.astype(jnp.int32), w)
+    out = out[..., :D]
+    if has_cls:
+        out = jnp.concatenate([z[:, :1], out], axis=1)
+    return out

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the token-drop kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def token_drop_ref(z: jnp.ndarray, keep_idx: jnp.ndarray,
+                   drop_weights: jnp.ndarray) -> jnp.ndarray:
+    """z: [N, D]; keep_idx: [k]; drop_weights: [N] normalized. -> [k+1, D]."""
+    kept = z[keep_idx]
+    fused = (drop_weights.astype(jnp.float32)[None, :]
+             @ z.astype(jnp.float32)).astype(z.dtype)
+    return jnp.concatenate([kept, fused], axis=0)

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, the multi-pod dry-run, roofline analysis,
+and the train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from other modules — importing it
+sets XLA_FLAGS for 512 host devices before jax initializes.
+"""
+from repro.launch import mesh  # noqa: F401  (safe: functions only)
+
+__all__ = ["mesh"]

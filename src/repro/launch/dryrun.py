@@ -1,0 +1,313 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell and each production mesh
+(single-pod 16×16, multi-pod 2×16×16), this driver:
+
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer state / batch /
+     caches (zero allocation — ``jax.eval_shape`` everywhere),
+  2. assigns shardings from dist/sharding.py rules,
+  3. ``jax.jit(step).lower(...).compile()`` — a failure here (sharding
+     mismatch, OOM at compile, unsupported collective) is a bug in the
+     framework, not the harness,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / parsed collective
+     bytes into a JSON cell file that EXPERIMENTS.md §Dry-run / §Roofline and
+     the §Perf hillclimbs read.
+
+NOTE the XLA_FLAGS assignment below MUST precede any jax import — jax locks
+the device count at first init (it is the first executable statement of the
+module; only the docstring and __future__ import sit above it). Tests
+override REPRO_DRYRUN_DEVICES to run tiny meshes quickly.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, get_config, grid_cells
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh, make_mesh
+from repro.models import model as M
+from repro.models import steps as ST
+from repro.optim.adamw import AdamW
+
+
+# ---------------------------------------------------------------------------
+def _spec_tree_params(cfg: ModelConfig, serve: bool = False):
+    spec = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    if serve and cfg.serve_param_dtype != cfg.param_dtype:
+        dt = jnp.dtype(cfg.serve_param_dtype)
+        spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dt if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), spec)
+    return spec
+
+
+def _bytes_of_spec_tree(tree, shardings, n_dev) -> int:
+    """Per-device bytes of a sharded spec tree (analytic; used when the CPU
+    backend's memory_analysis is unavailable)."""
+    flat = jax.tree_util.tree_flatten(tree)[0]
+    shs = jax.tree_util.tree_flatten(shardings)[0]
+    total = 0
+    for leaf, sh in zip(flat, shs):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        frac = 1
+        try:
+            spec = sh.spec
+            mesh = sh.mesh
+            for ax in spec:
+                if ax is None:
+                    continue
+                if isinstance(ax, tuple):
+                    for a in ax:
+                        frac *= mesh.shape[a]
+                else:
+                    frac *= mesh.shape[ax]
+        except Exception:
+            pass
+        total += n * jnp.dtype(leaf.dtype).itemsize // max(frac, 1)
+    return total
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               unroll: bool = False) -> Tuple[Any, Tuple, Dict]:
+    """Returns (fn, (args specs), in_shardings tuple) for the cell."""
+    params_spec = _spec_tree_params(cfg, serve=shape.kind != "train")
+    params_sh = SH.params_shardings(cfg, mesh, params_spec)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_spec = jax.eval_shape(opt.init, params_spec)
+        opt_sh = type(opt_spec)(step=SH.replicated(mesh),
+                                mu=params_sh, nu=params_sh)
+        batch_spec = ST.input_specs(cfg, shape)
+        batch_sh = SH.batch_shardings(mesh, batch_spec)
+
+        step = ST.make_train_step(cfg, opt, with_pruning=False,
+                                  unroll=unroll)
+
+        def fn(params, opt_state, batch):
+            new_p, _, new_o, metrics = step(params, opt_state, batch)
+            return new_p, new_o, metrics
+
+        return (fn, (params_spec, opt_spec, batch_spec),
+                (params_sh, opt_sh, batch_sh))
+
+    if shape.kind == "prefill":
+        batch_spec = ST.input_specs(cfg, shape)
+        batch_sh = SH.batch_shardings(mesh, batch_spec)
+        cache_spec = jax.eval_shape(
+            lambda: ST.init_caches(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = SH.cache_shardings(cfg, mesh, cache_spec)
+        prefill = ST.make_prefill(cfg, unroll=unroll)
+        return (prefill, (params_spec, batch_spec, cache_spec),
+                (params_sh, batch_sh, cache_sh))
+
+    # decode
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = SH.batch_shardings(mesh, tok_spec)
+    cache_spec = ST.serve_state_specs(cfg, shape)
+    cache_sh = SH.cache_shardings(cfg, mesh, cache_spec)
+    decode = ST.make_decode_step(cfg, unroll=unroll)
+    if cfg.family == "vlm":
+        vis_spec = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.num_vision_tokens,
+             cfg.vision_d_model or cfg.d_model), jnp.bfloat16)
+        vis_sh = SH.batch_shardings(mesh, vis_spec)
+        fn = lambda p, t, c, v: decode(p, t, c, v)
+        return (fn, (params_spec, tok_spec, cache_spec, vis_spec),
+                (params_sh, tok_sh, cache_sh, vis_sh))
+    fn = lambda p, t, c: decode(p, t, c)
+    return (fn, (params_spec, tok_spec, cache_spec),
+            (params_sh, tok_sh, cache_sh))
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: exact FLOP/byte/collective counts via two-point layer
+# extrapolation. ``cost_analysis`` counts while-loop bodies once, so we
+# compile *unrolled* reduced-depth variants (k and 2k repeating units),
+# fit cost(u) = a + b·u, and extrapolate to the full unit count.
+# ---------------------------------------------------------------------------
+def _unit_counts(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_period
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_layer_period
+    return cfg.num_layers
+
+
+def _with_units(cfg: ModelConfig, units: int) -> ModelConfig:
+    fam = cfg.family
+    if fam == "vlm":
+        return cfg.replace(num_layers=units * cfg.cross_attn_period)
+    if fam == "hybrid":
+        full_rem = cfg.num_layers % cfg.attn_layer_period
+        return cfg.replace(num_layers=units * cfg.attn_layer_period + full_rem)
+    if fam == "audio":
+        return cfg.replace(num_layers=units, encoder_layers=units)
+    return cfg.replace(num_layers=units)
+
+
+def _probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
+    """Compile unrolled 1-unit and 2-unit variants; return extrapolated
+    (flops, bytes, collective_bytes) at the full unit count."""
+    pts = []
+    for u in (1, 2):
+        c_small = _with_units(cfg, u)
+        fn, specs, shardings = build_cell(c_small, shape, mesh, unroll=True)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=shardings).lower(
+                *specs).compile()
+        cost = dict(compiled.cost_analysis() or {})
+        coll = RL.parse_collectives(compiled.as_text(),
+                                    default_trip_count=1)
+        pts.append({
+            "units": u,
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.total_bytes),
+            "coll_by_kind": dict(coll.bytes_by_kind),
+        })
+    U = _unit_counts(cfg)
+    (p1, p2) = pts
+
+    def extrap(k):
+        b = (p2[k] - p1[k]) / (p2["units"] - p1["units"])
+        a = p1[k] - b * p1["units"]
+        return a + b * U
+
+    coll_by_kind = {}
+    for kind in p1["coll_by_kind"]:
+        b = p2["coll_by_kind"][kind] - p1["coll_by_kind"][kind]
+        a = p1["coll_by_kind"][kind] - b
+        coll_by_kind[kind] = max(0.0, a + b * U)
+    return {
+        "flops": max(0.0, extrap("flops")),
+        "bytes": max(0.0, extrap("bytes")),
+        "collective_bytes": max(0.0, extrap("coll")),
+        "collectives_by_kind": coll_by_kind,
+        "probe_points": pts,
+        "units_full": U,
+    }
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_name: str,
+             out_dir: Optional[str] = None) -> Dict:
+    t0 = time.time()
+    result: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "chips": mesh.devices.size, "status": "ok",
+    }
+    try:
+        fn, specs, shardings = build_cell(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*specs)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        mem_stats = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_stats[k] = int(v)
+        if "argument_size_in_bytes" not in mem_stats:
+            mem_stats["argument_size_in_bytes"] = sum(
+                _bytes_of_spec_tree(s, sh, mesh.devices.size)
+                for s, sh in zip(specs, shardings))
+        # exact costs via unrolled two-point probes (the full compile above
+        # is the pass/fail + memory proof; scans hide per-layer cost)
+        probe = _probe_costs(cfg, shape, mesh)
+        t_probe = time.time()
+        rep = RL.analyze(cfg, shape, mesh_name, mesh.devices.size,
+                         probe["flops"], probe["bytes"],
+                         probe["collective_bytes"],
+                         probe["collectives_by_kind"], mem_stats)
+        result.update(
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            probe_s=round(t_probe - t_compile, 2),
+            memory=mem_stats,
+            probe=probe,
+            roofline=dataclasses.asdict(rep),
+        )
+    except Exception as e:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["wall_s"] = round(time.time() - t0, 2)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{cfg.name}__{shape.name}__{mesh_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both", "tiny"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", lambda: make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       lambda: make_production_mesh(multi_pod=True)))
+    if args.mesh == "tiny":  # test path: REPRO_DRYRUN_DEVICES=8
+        meshes.append(("tiny_2x2x2", lambda: make_mesh((2, 2, 2),
+                                                       ("pod", "data", "model"))))
+
+    cells = grid_cells(args.arch)
+    if args.shape:
+        cells = [(c, s) for c, s in cells if s.name == args.shape]
+
+    failures = 0
+    for mesh_name, mk in meshes:
+        mesh = mk()
+        for cfg, shape in cells:
+            fname = os.path.join(
+                args.out, f"{cfg.name}__{shape.name}__{mesh_name}.json")
+            if args.skip_done and os.path.exists(fname):
+                with open(fname) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[skip] {cfg.name} {shape.name} {mesh_name}")
+                        continue
+            r = run_cell(cfg, shape, mesh, mesh_name, args.out)
+            ok = r["status"] == "ok"
+            failures += (not ok)
+            dom = r.get("roofline", {}).get("dominant", "-")
+            print(f"[{'ok' if ok else 'FAIL'}] {cfg.name} {shape.name} "
+                  f"{mesh_name} wall={r['wall_s']}s dominant={dom}"
+                  + ("" if ok else f" :: {r['error']}"))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,164 @@
+"""§Perf hillclimb driver: re-run one cell's cost probes under a named
+config variant and report the three roofline terms vs the baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch command-r-plus-104b \\
+        --shape train_4k --variant remat_dots fuse_qkv
+
+Each variant is one hypothesis→change→measure iteration; results land in
+experiments/perf/<arch>__<shape>__<variant>.json and the comparison table
+is assembled into EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.configs.base import ModelConfig
+from repro.launch import roofline as RL
+from repro.launch.dryrun import _probe_costs, build_cell
+from repro.launch.mesh import make_production_mesh, make_mesh
+
+
+# variant name -> ModelConfig overrides
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "serve_bf16": {"serve_param_dtype": "bfloat16"},
+    "fuse_qkv": {"fuse_qkv": True},
+    "remat_dots": {"remat_policy": "dots"},
+    "remat_none": {"remat_policy": "none"},
+    "loss_chunk_512": {"loss_chunk": 512},
+    "loss_chunk_4096": {"loss_chunk": 4096},
+    "remat_dots+fuse_qkv": {"remat_policy": "dots", "fuse_qkv": True},
+    "serve_bf16+fuse_qkv": {"serve_param_dtype": "bfloat16",
+                            "fuse_qkv": True},
+    "pad_experts": {"moe_expert_pad_to": 16},
+    "pad_experts+fuse_qkv": {"moe_expert_pad_to": 16, "fuse_qkv": True},
+    "microbatch_4": {"microbatches": 4},
+    "microbatch_8": {"microbatches": 8},
+    "microbatch_8+remat_dots": {"microbatches": 8, "remat_policy": "dots"},
+    "rwkv_shard_kv": {"shard_rwkv_kv": True},
+    "rwkv_shard_kv+serve_bf16": {"shard_rwkv_kv": True,
+                                 "serve_param_dtype": "bfloat16"},
+    "moe_cf_1": {"moe_expert_pad_to": 16, "moe_capacity_factor": 1.0},
+    "rwkv_chunked_32": {"rwkv_chunk": 32},
+    # modeled: swap the jnp chunked attention for the validated Pallas
+    # flash kernel. XLA-CPU cannot compile Pallas TPU kernels, so the
+    # memory term is corrected analytically: the fp32 score/probability
+    # tiles (s, p + their backward recomputation) that the jnp path writes
+    # to HBM stay in VMEM inside the kernel. attention_tile_bytes() below
+    # documents the subtraction; everything else is the measured probe.
+    "pallas_flash_modeled": {},
+    "pallas_flash+microbatch8+fuseqkv": {"microbatches": 8,
+                                         "fuse_qkv": True},
+}
+
+MODELED_FLASH = {"pallas_flash_modeled", "pallas_flash+microbatch8+fuseqkv"}
+
+
+def attention_tile_bytes(cfg, shape, chips: int) -> float:
+    """Per-device bytes of the fp32 attention s/p tiles that the jnp
+    chunked path materializes in HBM and the Pallas kernel keeps in VMEM.
+
+    passes: fwd writes+reads s, then p (2 tensors x write+read = 4);
+    training backward under full remat recomputes both and forms ds/dp
+    (another 4); inference = 2 effective passes (p consumed fused)."""
+    if cfg.family in ("ssm",):
+        return 0.0
+    B = shape.global_batch
+    if shape.kind == "train":
+        Nq = Nk = shape.seq_len
+        passes = 8
+    elif shape.kind == "prefill":
+        Nq = Nk = shape.seq_len
+        passes = 2
+    else:  # decode: single q row — tiles negligible but counted
+        Nq, Nk = 1, shape.seq_len
+        passes = 2
+    data = model = 16 if chips >= 256 else 2
+    B_loc = max(B // data, 1)
+    H_loc = (cfg.num_heads // model if cfg.num_heads % model == 0
+             else cfg.num_heads)
+    n_attn = cfg.num_layers + cfg.encoder_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // max(cfg.attn_layer_period, 1)
+    return float(passes * B_loc * H_loc * Nq * Nk * 4 * n_attn)
+
+
+def run_variant(arch: str, shape_name: str, variant: str, mesh,
+                mesh_name: str, out_dir: str,
+                full_mem: bool = False) -> Dict:
+    cfg = get_config(arch).replace(**VARIANTS[variant])
+    shape = SHAPES_BY_NAME[shape_name]
+    t0 = time.time()
+    mem_stats = {}
+    if full_mem:
+        fn, specs, shardings = build_cell(cfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=shardings).lower(
+                *specs).compile()
+        mem = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "temp_size_in_bytes",
+                  "output_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_stats[k] = int(v)
+    probe = _probe_costs(cfg, shape, mesh)
+    if variant in MODELED_FLASH:
+        tiles = attention_tile_bytes(cfg, shape, mesh.devices.size)
+        probe["bytes"] = max(probe["bytes"] - tiles, 0.0)
+        probe["tile_bytes_subtracted"] = tiles
+    rep = RL.analyze(cfg, shape, mesh_name, mesh.devices.size,
+                     probe["flops"], probe["bytes"],
+                     probe["collective_bytes"],
+                     probe["collectives_by_kind"], mem_stats)
+    result = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": mesh_name, "wall_s": round(time.time() - t0, 1),
+        "probe": probe, "roofline": dataclasses.asdict(rep),
+        "memory": mem_stats,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir,
+                           f"{arch}__{shape_name}__{variant}.json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    r = rep
+    print(f"[{variant}] compute={r.compute_s*1e3:.3f}ms "
+          f"memory={r.memory_s*1e3:.3f}ms coll={r.collective_s*1e3:.3f}ms "
+          f"dominant={r.dominant} useful={r.useful_ratio:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", nargs="+", default=["baseline"])
+    ap.add_argument("--mesh", default="single", choices=["single", "tiny"])
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--full-mem", action="store_true",
+                    help="also run the full compile for memory_analysis")
+    args = ap.parse_args()
+    if args.mesh == "single":
+        mesh = make_production_mesh()
+        mesh_name = "single_pod_16x16"
+    else:
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        mesh_name = "tiny_2x2x2"
+    for v in args.variant:
+        run_variant(args.arch, args.shape, v, mesh, mesh_name, args.out,
+                    full_mem=args.full_mem)
+
+
+if __name__ == "__main__":
+    main()

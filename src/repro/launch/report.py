@@ -1,0 +1,141 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+cell JSONs, and §Perf from the perf-variant JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.core.perf_model import TPU_HBM_BW
+from repro.launch.roofline import analytic_memory_bytes
+
+DRY = "experiments/dryrun"
+PERF = "experiments/perf"
+MD = "EXPERIMENTS.md"
+
+
+def load(dirname):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f} GiB"
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile [s] | args/chip | temps/chip |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    ok = err = 0
+    for c in cells:
+        mem = c.get("memory", {})
+        status = c.get("status")
+        ok += status == "ok"
+        err += status != "ok"
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh'].replace('_',' ')} | "
+            f"{status} | {c.get('compile_s','-')} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} |")
+    lines.append("")
+    lines.append(f"**{ok} ok / {err} failed** across "
+                 f"{len({c['mesh'] for c in cells})} mesh(es).")
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| arch | shape | compute [ms] | mem lo..hi [ms] | collective [ms] | "
+        "dominant | useful | peak mem/chip | top collective | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok" or "roofline" not in c:
+            continue
+        if "single" not in c["mesh"]:
+            continue  # roofline table is single-pod per the spec
+        r = c["roofline"]
+        cfg = get_config(r["arch"])
+        shp = SHAPES_BY_NAME[r["shape"]]
+        mem_lo = analytic_memory_bytes(cfg, shp, r["chips"]) / TPU_HBM_BW
+        colls = r.get("collectives", {})
+        top = max(colls.items(), key=lambda kv: kv[1])[0] if any(
+            colls.values()) else "-"
+        note = _bottleneck_note(r, mem_lo)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.3f} | "
+            f"{mem_lo*1e3:.2f}..{r['memory_s']*1e3:.0f} | "
+            f"{r['collective_s']*1e3:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{fmt_bytes(r['peak_mem_bytes'])} | {top} | {note} |")
+    return "\n".join(lines)
+
+
+def _bottleneck_note(r, mem_lo) -> str:
+    """One sentence on what moves the dominant term down."""
+    comp, coll = r["compute_s"], r["collective_s"]
+    if r["dominant"] == "memory":
+        if mem_lo < comp:
+            return ("fusion-bound upper: on TPU fusion pushes toward the "
+                    "analytic floor, turning this compute-bound")
+        if "train" in r["shape"] or "prefill" in r["shape"]:
+            return "flash-kernel VMEM tiles + bf16 master weights cut traffic"
+        return "bf16 serve weights + KV pruning halve the weight/cache reads"
+    if r["dominant"] == "collective":
+        return "fuse QKV + overlap reduce-scatter with backprop"
+    return "increase per-chip batch or sequence to amortize weight reads"
+
+
+def perf_table(cells) -> str:
+    if not cells:
+        return "_(run repro.launch.perf to populate)_"
+    by_cell = defaultdict(list)
+    for c in cells:
+        by_cell[(c["arch"], c["shape"])].append(c)
+    out = []
+    for (arch, shape), vs in sorted(by_cell.items()):
+        out.append(f"\n### {arch} × {shape}\n")
+        out.append("| variant | compute [ms] | memory [ms] | collective [ms]"
+                   " | dominant | vs baseline dominant |")
+        out.append("|---|---|---|---|---|---|")
+        base = next((v for v in vs if v["variant"] == "baseline"), None)
+        for v in sorted(vs, key=lambda x: x["variant"] != "baseline"):
+            r = v["roofline"]
+            delta = ""
+            if base and v is not base:
+                b = base["roofline"]
+                dom = b["dominant"] + "_s"
+                if b[dom] > 0:
+                    delta = f"{(r[dom]/b[dom]-1)*100:+.1f}%"
+            out.append(
+                f"| {v['variant']} | {r['compute_s']*1e3:.3f} | "
+                f"{r['memory_s']*1e3:.3f} | {r['collective_s']*1e3:.3f} | "
+                f"{r['dominant']} | {delta} |")
+    return "\n".join(out)
+
+
+def main():
+    dry = load(DRY)
+    perf = load(PERF)
+    with open(MD) as f:
+        md = f.read()
+    md = md.replace("RESULTS_DRYRUN_PLACEHOLDER", dryrun_table(dry)) \
+           .replace("RESULTS_ROOFLINE_PLACEHOLDER", roofline_table(dry)) \
+           .replace("RESULTS_PERF_PLACEHOLDER", perf_table(perf))
+    with open(MD, "w") as f:
+        f.write(md)
+    print(f"rendered {len(dry)} dry-run cells, {len(perf)} perf variants")
+
+
+if __name__ == "__main__":
+    main()

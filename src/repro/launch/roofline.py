@@ -1,0 +1,249 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs       / (chips · 197e12)         [bf16 peak]
+    memory     = HLO_bytes       / (chips · 819e9)          [HBM]
+    collective = collective_bytes / (chips · links · 50e9)  [ICI]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are parsed from the optimized HLO text: we sum the *result shape*
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, multiplying ops that live inside while-loop bodies
+(scan layers) by the loop trip count when it is recoverable from the HLO,
+else by the model's layer count (documented approximation).
+
+Also reported: MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per
+token·step, and MODEL_FLOPS / HLO_FLOPs — the useful-compute ratio that
+catches remat and masked-attention waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.perf_model import TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like 'f32[128,1024]' or a tuple
+    '(f32[2], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, default_trip_count: int = 1
+                      ) -> CollectiveStats:
+    """Sum collective result bytes over the optimized module.
+
+    Computation-aware: ops inside a computation whose name suggests a loop
+    body are multiplied by ``default_trip_count`` (the caller passes the
+    scan length, i.e. the layer count)."""
+    bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{$", stripped)
+        if stripped.endswith("{") and ("(" in stripped):
+            cm = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if cm:
+                current_comp = cm.group(1)
+        for kind in _COLLECTIVES:
+            # matches: %x = TYPE[SHAPE] all-reduce(...), or all-reduce-start
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                lhs = stripped.split(f" {kind}")[0]
+                nbytes = _shape_bytes(lhs)
+                mult = 1
+                if any(t in current_comp for t in ("body", "while", "scan",
+                                                   "loop")):
+                    mult = default_trip_count
+                bytes_by[kind] += nbytes * mult
+                count_by[kind] += mult
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    peak_mem_bytes: int
+    collectives: Dict[str, int]
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.3f} | {self.memory_s*1e3:.3f} | "
+                f"{self.collective_s*1e3:.3f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} | {self.peak_mem_bytes/2**30:.2f} |")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_params·D_tokens for train; 2·N·D for a forward-only cell.
+    MoE counts active params only."""
+    n = cfg.param_count(active_only=cfg.family == "moe")
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def ssm_scan_correction(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Tuple[float, float]:
+    """Analytic (flops, bytes) for the recurrent time scans that cannot be
+    unrolled in the cost probes (mamba2 / rwkv6 state updates run S
+    sequential steps; the probe counts exactly one). Returns the missing
+    (S-1)/S portion. Decode shapes run one step — no correction."""
+    if cfg.family not in ("hybrid", "ssm") or shape.kind == "decode":
+        return 0.0, 0.0
+    B = shape.global_batch
+    S = shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd for training
+    if cfg.family == "hybrid":
+        inner = cfg.ssm_expand * cfg.d_model
+        H = inner // 64
+        per_step_flops = 5.0 * B * H * 64 * cfg.ssm_state
+        per_step_bytes = 4.0 * B * (inner + 2 * cfg.ssm_state + H) * 2
+        L = cfg.num_layers
+    else:  # rwkv6
+        H = cfg.num_heads
+        dh = cfg.d_model // H
+        per_step_flops = 5.0 * B * H * dh * dh
+        per_step_bytes = 4.0 * B * 4 * cfg.d_model * 2
+        L = cfg.num_layers
+    extra = (S - 1) * L * mult
+    return per_step_flops * extra, per_step_bytes * extra
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                          flash_kernel: bool = False) -> float:
+    """Per-device HBM bytes under PERFECT fusion — the lower bound that
+    brackets the measured (XLA-CPU, fusion-naive) upper bound. On TPU the
+    achieved traffic sits near this bound; §Perf reports both.
+
+    Components: weight+optimizer traffic, one read+write per major
+    activation (bf16), attention s/p tiles (dropped when ``flash_kernel`` —
+    the Pallas kernel keeps them in VMEM), KV-cache traffic for decode,
+    loss-chunk logits for train."""
+    data = model = 16 if chips >= 256 else 2
+    B = shape.global_batch
+    S = shape.seq_len
+    D, FF, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    L = cfg.num_layers + cfg.encoder_layers
+    params_local = cfg.param_count() / (model if chips >= 256 else 1)
+
+    if shape.kind == "train":
+        B_loc = max(B // data, 1)
+        toks = B_loc * S
+        act = (6 * toks * D + 3 * toks * FF) * 2          # bf16 fwd
+        act *= 2.5                                         # bwd + remat
+        opt = 7 * params_local * 4                         # p, g, m, v traffic
+        tiles = 0.0
+        if cfg.family not in ("ssm",) and not flash_kernel:
+            H_loc = (cfg.num_heads // model
+                     if cfg.num_heads % model == 0 else cfg.num_heads)
+            tiles = 8 * B_loc * H_loc * S * S * 4
+        loss = 2 * toks * (V / model) * 4                  # chunked logits
+        return act * L + opt + tiles * L + loss
+    if shape.kind == "prefill":
+        B_loc = max(B // data, 1)
+        toks = B_loc * S
+        act = (6 * toks * D + 3 * toks * FF) * 2
+        tiles = 0.0
+        if cfg.family not in ("ssm",) and not flash_kernel:
+            H_loc = (cfg.num_heads // model
+                     if cfg.num_heads % model == 0 else cfg.num_heads)
+            tiles = 2 * B_loc * H_loc * S * S * 4
+        cache_w = 2 * toks * cfg.num_kv_heads * cfg.head_dim * 2 / \
+            max(model if cfg.num_kv_heads % model == 0 else 1, 1)
+        return (act + tiles + cache_w) * L + 2 * params_local
+    # decode: weights once + cache read once + tiny activations
+    B_loc = max(B // data, 1)
+    pbytes = 2 if cfg.serve_param_dtype == "bfloat16" else 4
+    cache = (2 * B_loc * S * cfg.num_kv_heads * cfg.head_dim * 2
+             / max(model if cfg.num_kv_heads % model == 0 else 1, 1)) * L
+    if cfg.family == "ssm":
+        cache = 0.0
+    if cfg.family == "hybrid":
+        cache *= (cfg.num_layers // max(cfg.attn_layer_period, 1)) / max(L, 1)
+    return params_local * pbytes + cache + B_loc * 20 * D * 2 * L
+
+
+def analyze(cfg: ModelConfig, shape: ShapeConfig, mesh_name: str, chips: int,
+            flops: float, hbytes: float, collective_bytes: float,
+            collectives_by_kind: Dict[str, float], memory_stats: Dict,
+            ici_links: int = 4) -> RooflineReport:
+    """``flops`` / ``hbytes`` / ``collective_bytes`` are PER-DEVICE numbers
+    (XLA's cost_analysis reports the partitioned per-device program; the
+    calibration test in tests/test_roofline.py pins this convention). The
+    roofline terms therefore divide by single-chip peaks; ``useful_ratio``
+    rescales model flops by the chip count."""
+    ssm_flops, ssm_bytes = ssm_scan_correction(cfg, shape)
+    flops = flops + ssm_flops / chips
+    hbytes = hbytes + ssm_bytes / chips
+
+    compute_s = flops / TPU_PEAK_FLOPS
+    memory_s = hbytes / TPU_HBM_BW
+    collective_s = collective_bytes / (ici_links * TPU_ICI_BW)
+    dominant = max([("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)], key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    total_hlo_flops = flops * chips
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=total_hlo_flops, hlo_bytes=hbytes * chips,
+        collective_bytes=float(collective_bytes) * chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf,
+        useful_ratio=(mf / total_hlo_flops) if total_hlo_flops else 0.0,
+        peak_mem_bytes=int(memory_stats.get("temp_size_in_bytes", 0)
+                           + memory_stats.get("argument_size_in_bytes", 0)),
+        collectives={k: int(v) for k, v in collectives_by_kind.items()},
+    )

@@ -1,0 +1,5 @@
+"""Model zoo: unified builder for all assigned architectures + the paper's ViT."""
+from repro.models import layers, attention, moe, ssm, model, steps, pruning_glue
+
+__all__ = ["layers", "attention", "moe", "ssm", "model", "steps",
+           "pruning_glue"]

@@ -1,0 +1,282 @@
+"""Attention: GQA with RoPE, optional qk-norm, chunked online-softmax
+("flash-style") computation, KV caches, and cross-attention.
+
+The chunked path is the memory-roofline-relevant implementation: it never
+materializes the ``N×N`` score matrix (peak transient is
+``[B, H, q_chunk, k_chunk]``), doubles as the pure-jnp oracle for the Pallas
+``flash_attention`` kernel, and is what the dry-run lowers on the CPU host
+platform (the Pallas kernel is selected on real TPU backends).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, linear, rms_norm
+
+NEG_INF = -1e30
+
+# Cost-probe mode (see launch/dryrun.py): when True, the chunked attention
+# uses Python loops with ≤4 chunks per axis so the lowered HLO has no while
+# loops and XLA's cost_analysis counts every FLOP. Tracing is synchronous,
+# so a module flag is safe.
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unroll_mode(on: bool = True):
+    global _UNROLL
+    old = _UNROLL
+    _UNROLL = on
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_max, KV, Dh]
+    v: jax.Array          # [B, S_max, KV, Dh]
+    length: jax.Array     # [] int32 — tokens currently valid
+    # beyond-paper dynamic KV pruning: attention mass accumulated per slot
+    attn_mass: jax.Array  # [B, S_max] float32
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+        attn_mass=jnp.zeros((batch, max_len), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure jnp, O(N) memory)
+# ---------------------------------------------------------------------------
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for c in range(cap, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+def _attend_chunk(q, k, v, mask, scale):
+    """q:[B,G,Hq,qc,Dh] k:[B,G,kc,Dh] v:[B,G,kc,Dh] mask:[qc,kc] or None."""
+    s = jnp.einsum("bghqd,bgkd->bghqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bghqk,bgkd->bghqd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        q_offset: int | jax.Array = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        q_chunk: int = 512, k_chunk: int = 512,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Grouped-query chunked attention.
+
+    q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]; Hq = G·KV groups.
+    ``q_offset`` is the absolute position of q[0] (decode). ``kv_len`` masks
+    cache slots >= kv_len. Returns [B, Nq, Hq, Dh] in q.dtype.
+    """
+    B, Nq, Hq, Dh = q.shape
+    _, Nk, KV, _ = k.shape
+    G = KV
+    per = Hq // KV
+    if scale is None:
+        scale = Dh ** -0.5
+
+    Nq_orig = Nq
+    if _UNROLL:  # cost-probe mode: ≤4 chunks per axis, loop-free HLO.
+        # Pad (instead of searching divisors — prime N like the 1601 vision
+        # tokens would otherwise degrade to chunk=1 and trace N bodies).
+        q_chunk = max(math.ceil(Nq / 4), 1)
+        k_chunk = max(math.ceil(Nk / 4), 1)
+        q_pad = (-Nq) % q_chunk
+        k_pad = (-Nk) % k_chunk
+        if k_pad:
+            if kv_len is None:
+                kv_len = jnp.int32(Nk)
+            k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+            Nk += k_pad
+        if q_pad:
+            q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+            Nq += q_pad
+    else:
+        q_chunk = _largest_divisor_leq(Nq, min(q_chunk, Nq))
+        k_chunk = _largest_divisor_leq(Nk, min(k_chunk, Nk))
+    nq, nk = Nq // q_chunk, Nk // k_chunk
+
+    qr = q.reshape(B, nq, q_chunk, G, per, Dh).transpose(1, 0, 3, 4, 2, 5)
+    # qr: [nq, B, G, per, qc, Dh]
+    kr = k.reshape(B, nk, k_chunk, G, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, k_chunk, G, Dh).transpose(1, 0, 3, 2, 4)
+    # kr/vr: [nk, B, G, kc, Dh]
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def per_q_chunk(qi, qc_data):
+        q_pos = q_pos_base + qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, kc_pack):
+            o, m, l = carry
+            ki, kc_data, vc_data = kc_pack
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask &= (k_pos < kv_len)[None, :]
+            s = jnp.einsum("bghqd,bgkd->bghqk", qc_data.astype(jnp.float32),
+                           kc_data.astype(jnp.float32)) * scale
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bghqk,bgkd->bghqd", p, vc_data.astype(jnp.float32))
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((B, G, per, q_chunk, Dh), jnp.float32)
+        m0 = jnp.full((B, G, per, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, per, q_chunk), jnp.float32)
+        if _UNROLL:
+            carry = (o0, m0, l0)
+            for ki in range(nk):
+                carry, _ = body(carry, (jnp.asarray(ki), kr[ki], vr[ki]))
+            o, m, l = carry
+        else:
+            (o, m, l), _ = jax.lax.scan(
+                body, (o0, m0, l0), (jnp.arange(nk), kr, vr))
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    if _UNROLL:
+        out = jnp.stack([per_q_chunk(jnp.asarray(i), qr[i])
+                         for i in range(nq)])
+    else:
+        out = jax.lax.map(lambda pack: per_q_chunk(pack[0], pack[1]),
+                          (jnp.arange(nq), qr))
+    # out: [nq, B, G, per, qc, Dh] -> [B, Nq, Hq, Dh]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Nq, Hq, Dh)
+    if Nq != Nq_orig:
+        out = out[:, :Nq_orig]
+    return out.astype(q.dtype)
+
+
+def attention_probs_row(q_row: jax.Array, k: jax.Array,
+                        kv_len: Optional[jax.Array] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Softmax attention of ONE query row against all keys, per head —
+    exactly what the TDM scoring needs (CLS row for ViT, last row for LM
+    prefill) without materializing the full ``A`` matrix.
+
+    q_row: [B, Hq, Dh]; k: [B, Nk, KV, Dh]. Returns probs [B, Hq, Nk].
+    """
+    B, Nk, KV, Dh = k.shape
+    Hq = q_row.shape[1]
+    per = Hq // KV
+    if scale is None:
+        scale = Dh ** -0.5
+    qg = q_row.reshape(B, KV, per, Dh).astype(jnp.float32)
+    s = jnp.einsum("bgpd,bkgd->bgpk", qg, k.astype(jnp.float32)) * scale
+    if kv_len is not None:
+        pos = jnp.arange(Nk)
+        s = jnp.where((pos < kv_len)[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p.reshape(B, Hq, Nk)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+def attention_block(x: jax.Array, p, cfg, *, causal: bool,
+                    cache: Optional[KVCache] = None,
+                    positions: Optional[jax.Array] = None,
+                    collect_scores: bool = False,
+                    score_row: int = 0,
+                    use_rope: bool = True,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    ) -> Tuple[jax.Array, Optional[KVCache], Optional[jax.Array]]:
+    """One attention sublayer. Returns (out, new_cache, tdm_scores).
+
+    * training/prefill: ``cache is None`` or appended-to.
+    * decode: x is [B, 1, D]; cache holds the past.
+    * cross-attention: pass ``kv_override=(k, v)`` (already projected
+      encoder keys/values) — used by whisper decoder + VLM image layers.
+    """
+    B, N, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    if "wqkv" in p and kv_override is None:
+        qkv = linear(x, p["wqkv"])  # one matmul: fewer activation gathers
+        q, k, v = jnp.split(qkv, [H * Dh, (H + KV) * Dh], axis=-1)
+        q = q.reshape(B, N, H, Dh)
+        k = k.reshape(B, N, KV, Dh)
+        v = v.reshape(B, N, KV, Dh)
+    else:
+        q = linear(x, p["wq"], p.get("bq")).reshape(B, N, H, Dh)
+        if kv_override is None:
+            k = linear(x, p["wk"], p.get("bk")).reshape(B, N, KV, Dh)
+            v = linear(x, p["wv"], p.get("bv")).reshape(B, N, KV, Dh)
+        else:
+            k, v = kv_override
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        offset = cache.length if cache is not None else 0
+        positions = offset + jnp.arange(N)
+        if positions.ndim == 1:
+            positions = jnp.broadcast_to(positions, (B, N))
+    if use_rope and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    tdm_scores = None
+    if cache is not None and kv_override is None:
+        # write new k/v at [length, length+N)
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+        new_len = cache.length + N
+        out = flash_attention_jnp(
+            q, k_all, v_all, causal=causal, q_offset=cache.length,
+            kv_len=new_len,
+            q_chunk=min(512, N), k_chunk=min(512, k_all.shape[1]))
+        # accumulate attention mass for dynamic KV pruning (decode only)
+        mass = cache.attn_mass
+        if N == 1:
+            probs = attention_probs_row(q[:, 0], k_all, kv_len=new_len)
+            mass = mass + probs.mean(axis=1)
+        new_cache = KVCache(k_all, v_all, new_len, mass)
+    else:
+        kv_len = None
+        out = flash_attention_jnp(
+            q, k, v, causal=causal and kv_override is None,
+            q_chunk=min(512, N), k_chunk=min(512, k.shape[1]))
+
+    if collect_scores:
+        probs = attention_probs_row(q[:, score_row], k, None)
+        tdm_scores = probs.mean(axis=1)  # [B, Nk]
+
+    out = out.reshape(B, N, H * Dh)
+    out = linear(out, p["wo"], p.get("bo"))
+    return out, new_cache, tdm_scores

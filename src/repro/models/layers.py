@@ -1,0 +1,95 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Conventions
+-----------
+* Params are nested dicts of ``jnp.ndarray``; per-layer params are *stacked*
+  along a leading layer axis and consumed with ``jax.lax.scan`` so deep
+  models compile one layer body (MaxText-style).
+* All matmul weights are stored ``[in, out]``.
+* Prunable weights get masked *before* the forward (see
+  ``repro.models.pruning_glue``); layers themselves are pruning-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., N, H, Dh]; positions: broadcastable to [..., N]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., N, Dh/2]
+    angles = angles[..., None, :]  # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def glu_mlp(x: jax.Array, p) -> jax.Array:
+    """SwiGLU feed-forward: (silu(x·wg) ⊙ (x·wi)) · wo."""
+    g = jax.nn.silu(linear(x, p["wg"]))
+    u = linear(x, p["wi"])
+    return linear(g * u, p["wo"])
+
+
+def gelu_mlp(x: jax.Array, p) -> jax.Array:
+    """Classic transformer FFN (ViT / whisper): gelu(x·wi + bi)·wo + bo."""
+    h = jax.nn.gelu(linear(x, p["wi"], p.get("bi")), approximate=True)
+    return linear(h, p["wo"], p.get("bo"))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    scale = (2.0 / (in_dim + out_dim)) ** 0.5
+    return scale * jax.random.normal(key, (in_dim, out_dim), dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return 0.02 * jax.random.normal(key, (vocab, dim), dtype)
+
+
+def stack_init(key, n: int, fn, *args, **kw):
+    """Stack ``n`` independent inits along a leading axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(k, *args, **kw))(keys)

@@ -1,0 +1,619 @@
+"""Unified model builder for every assigned architecture family.
+
+Families and their layer plans:
+
+  dense   — embed → scan[attn + SwiGLU] → norm → unembed
+  moe     — embed → scan[attn + MoE-FFN(+shared)] → norm → unembed
+  vlm     — embed → scan over stages[(period−1)·self + 1·cross(vision)] → ...
+  audio   — frames → scan[enc self-attn] ; tokens → scan[dec self + cross]
+  hybrid  — embed → scan over stages[period·mamba2] + shared-attn block → ...
+  zamba2-style trailing mamba layers handled as a second scan
+  ssm     — embed → scan[rwkv6 block] → norm → unembed
+  vit     — patch embed → Python loop[encoder (+TDM at cfg layers)] → head
+
+Per-layer params are stacked on a leading axis; deep stacks compile one scan
+body. Forward signatures support three modes:
+  "train"   — full sequence, no cache
+  "prefill" — full sequence, returns serve caches
+  "decode"  — one token per call against caches
+
+The paper's static weight pruning is applied by masking the stacked weights
+*before* the forward (``repro.models.pruning_glue``); the TDM (dynamic token
+pruning) lives in the ViT loop and the LM prefill loop path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.core import token_pruning as TP
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+def _attn_params(key, cfg: ModelConfig, dtype, kv_from: int | None = None):
+    d = kv_from or cfg.d_model
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    if cfg.fuse_qkv and kv_from is None:
+        p = {
+            "wqkv": L.dense_init(ks[0], cfg.d_model, (H + 2 * KV) * Dh, dtype),
+            "wo": L.dense_init(ks[3], H * Dh, cfg.d_model, dtype),
+        }
+    else:
+        p = {
+            "wq": L.dense_init(ks[0], cfg.d_model, H * Dh, dtype),
+            "wk": L.dense_init(ks[1], d, KV * Dh, dtype),
+            "wv": L.dense_init(ks[2], d, KV * Dh, dtype),
+            "wo": L.dense_init(ks[3], H * Dh, cfg.d_model, dtype),
+        }
+    if cfg.use_bias:
+        p.update(bq=jnp.zeros((H * Dh,), dtype), bk=jnp.zeros((KV * Dh,), dtype),
+                 bv=jnp.zeros((KV * Dh,), dtype), bo=jnp.zeros((cfg.d_model,), dtype))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((Dh,), dtype), k_norm=jnp.ones((Dh,), dtype))
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, dtype, glu: bool = True,
+                d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if glu:
+        return {"wg": L.dense_init(ks[0], d, ff, dtype),
+                "wi": L.dense_init(ks[1], d, ff, dtype),
+                "wo": L.dense_init(ks[2], ff, d, dtype)}
+    p = {"wi": L.dense_init(ks[0], d, ff, dtype),
+         "wo": L.dense_init(ks[1], ff, d, dtype)}
+    if cfg.use_bias:
+        p.update(bi=jnp.zeros((ff,), dtype), bo=jnp.zeros((d,), dtype))
+    return p
+
+
+def _decoder_layer(key, cfg, dtype, glu=True):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": _attn_params(k1, cfg, dtype),
+            "mlp": _mlp_params(k2, cfg, dtype, glu)}
+
+
+def _stacked(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Build the full parameter pytree for ``cfg`` (fp32 by default).
+
+    For the dry-run this is only ever called under ``jax.eval_shape``."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    fam = cfg.family
+    ks = jax.random.split(key, 8)
+    if fam == "vit":
+        return _init_vit(cfg, key, dtype)
+
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    if fam in ("dense",):
+        p["layers"] = _stacked(ks[2], cfg.num_layers,
+                               lambda k: _decoder_layer(k, cfg, dtype))
+    elif fam == "moe":
+        def layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                    "ln2": jnp.ones((cfg.d_model,), dtype),
+                    "attn": _attn_params(k1, cfg, dtype),
+                    "moe": MOE.init_moe_params(k2, cfg, dtype)}
+        p["layers"] = _stacked(ks[2], cfg.num_layers, layer)
+    elif fam == "vlm":
+        period = cfg.cross_attn_period
+        n_stages = cfg.num_layers // period
+        n_self = period - 1
+
+        def self_stage(k):
+            return _stacked(k, n_self, lambda kk: _decoder_layer(kk, cfg, dtype))
+
+        def cross_layer(k):
+            k1, k2 = jax.random.split(k)
+            lay = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                   "ln2": jnp.ones((cfg.d_model,), dtype),
+                   "attn": _attn_params(k1, cfg, dtype,
+                                        kv_from=cfg.vision_d_model or cfg.d_model),
+                   "mlp": _mlp_params(k2, cfg, dtype, glu=True),
+                   "gate": jnp.zeros((), dtype)}
+            return lay
+
+        p["stages"] = {
+            "self": _stacked(ks[2], n_stages, self_stage),
+            "cross": _stacked(ks[3], n_stages, cross_layer),
+        }
+    elif fam == "audio":
+        p["enc_layers"] = _stacked(
+            ks[2], cfg.encoder_layers,
+            lambda k: _decoder_layer(k, cfg, dtype, glu=False))
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                    "ln_x": jnp.ones((cfg.d_model,), dtype),
+                    "ln2": jnp.ones((cfg.d_model,), dtype),
+                    "attn": _attn_params(k1, cfg, dtype),
+                    "xattn": _attn_params(k2, cfg, dtype),
+                    "mlp": _mlp_params(k3, cfg, dtype, glu=False)}
+        p["layers"] = _stacked(ks[3], cfg.num_layers, dec_layer)
+        p["enc_ln_f"] = jnp.ones((cfg.d_model,), dtype)
+        p["enc_pos"] = 0.02 * jax.random.normal(
+            ks[4], (cfg.num_audio_frames, cfg.d_model), dtype)
+    elif fam == "hybrid":
+        period = cfg.attn_layer_period
+        n_stages = cfg.num_layers // period
+        rem = cfg.num_layers - n_stages * period
+
+        def mamba_stage(k):
+            return _stacked(k, period,
+                            lambda kk: {"ln": jnp.ones((cfg.d_model,), dtype),
+                                        "mamba": SSM.init_mamba_params(kk, cfg, dtype)})
+        p["stages"] = _stacked(ks[2], n_stages, mamba_stage)
+        p["shared_attn"] = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                            "ln2": jnp.ones((cfg.d_model,), dtype),
+                            "attn": _attn_params(ks[3], cfg, dtype),
+                            "mlp": _mlp_params(ks[4], cfg, dtype, glu=True)}
+        if rem:
+            p["tail"] = _stacked(
+                ks[5], rem,
+                lambda kk: {"ln": jnp.ones((cfg.d_model,), dtype),
+                            "mamba": SSM.init_mamba_params(kk, cfg, dtype)})
+    elif fam == "ssm":
+        p["layers"] = _stacked(ks[2], cfg.num_layers,
+                               lambda k: SSM.init_rwkv_params(k, cfg, dtype))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _init_vit(cfg: ModelConfig, key, dtype) -> Dict:
+    n_patches = (cfg.image_size // cfg.patch_size) ** 2
+    patch_dim = cfg.patch_size ** 2 * 3
+    ks = jax.random.split(key, cfg.num_layers + 4)
+    return {
+        "patch_embed": L.dense_init(ks[0], patch_dim, cfg.d_model, dtype),
+        "patch_bias": jnp.zeros((cfg.d_model,), dtype),
+        "cls": 0.02 * jax.random.normal(ks[1], (1, 1, cfg.d_model), dtype),
+        "pos": 0.02 * jax.random.normal(ks[2], (n_patches + 1, cfg.d_model), dtype),
+        "layers": [
+            {"ln1_s": jnp.ones((cfg.d_model,), dtype),
+             "ln1_b": jnp.zeros((cfg.d_model,), dtype),
+             "ln2_s": jnp.ones((cfg.d_model,), dtype),
+             "ln2_b": jnp.zeros((cfg.d_model,), dtype),
+             "attn": _attn_params(ks[3 + i], cfg, dtype),
+             "mlp": _mlp_params(jax.random.fold_in(ks[3 + i], 1), cfg, dtype,
+                                glu=False)}
+            for i in range(cfg.num_layers)
+        ],
+        "ln_f_s": jnp.ones((cfg.d_model,), dtype),
+        "ln_f_b": jnp.zeros((cfg.d_model,), dtype),
+        "head": L.dense_init(ks[-1], cfg.d_model, cfg.num_classes, dtype),
+    }
+
+
+# ===========================================================================
+# Forward passes
+# ===========================================================================
+def _self_layer_fwd(x, lp, cfg, *, causal=True, cache=None, glu=True):
+    h, new_cache, _ = A.attention_block(
+        L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+        causal=causal, cache=cache)
+    x = x + h
+    mlp = L.glu_mlp if glu else L.gelu_mlp
+    x = x + mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+    return x, new_cache
+
+
+def _moe_layer_fwd(x, lp, cfg, cache=None):
+    h, new_cache, _ = A.attention_block(
+        L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+        causal=True, cache=cache)
+    x = x + h
+    y, aux = MOE.moe_ffn(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["moe"], cfg)
+    return x + y, new_cache, aux
+
+
+def _cross_layer_fwd(x, lp, cfg, vis_kv, cache_unused=None):
+    """Gated cross-attention layer (k/v projected from vision tokens)."""
+    B, Nv, _ = vis_kv.shape
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    k = L.linear(vis_kv, lp["attn"]["wk"]).reshape(B, Nv, KV, Dh)
+    v = L.linear(vis_kv, lp["attn"]["wv"]).reshape(B, Nv, KV, Dh)
+    h, _, _ = A.attention_block(
+        L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+        causal=False, kv_override=(k, v), use_rope=False)
+    x = x + jnp.tanh(lp["gate"]).astype(x.dtype) * h
+    x = x + L.glu_mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+    return x
+
+
+class Output(NamedTuple):
+    logits: jax.Array
+    caches: Any = None
+    aux_loss: jax.Array | float = 0.0
+    hidden: Optional[jax.Array] = None
+
+
+def unembed_matrix(cfg: ModelConfig, params: Dict) -> jax.Array:
+    w = params.get("unembed", None)
+    return w if w is not None else params["embed"].T
+
+
+def _remat(cfg, body):
+    """Apply the configured activation-checkpoint policy to a scan body."""
+    pol = cfg.remat_policy
+    if pol == "none":
+        return body
+    if pol == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _unrolled_scan(fn, carry, xs):
+    """Python-loop scan substitute: produces while-free HLO so
+    ``cost_analysis`` counts every layer (the dry-run's cost probes)."""
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, x_i)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def forward_lm(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+               mode: str = "train", caches: Any = None,
+               vision_embeds: Optional[jax.Array] = None,
+               audio_frames: Optional[jax.Array] = None,
+               remat: bool = True, logits_for: str = "all",
+               unroll: bool = False) -> Output:
+    """Language-model forward for all non-ViT families.
+
+    ``logits_for``: "all" materializes [B, N, V] logits; "last" computes
+    only the final position (prefill path — avoids a [B, S, V] tensor);
+    "none" returns hidden states only (the chunked-loss training path).
+    ``unroll``: replace layer/attention scans with Python loops so the HLO
+    is while-free (the dry-run's exact cost probes)."""
+    with A.unroll_mode(unroll):
+        return _forward_lm_impl(cfg, params, tokens, mode, caches,
+                                vision_embeds, audio_frames, remat,
+                                logits_for, unroll)
+
+
+def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                     mode: str, caches: Any,
+                     vision_embeds: Optional[jax.Array],
+                     audio_frames: Optional[jax.Array],
+                     remat: bool, logits_for: str,
+                     unroll: bool) -> Output:
+    fam = cfg.family
+    adt = jnp.dtype(cfg.dtype)
+    scan = _unrolled_scan if unroll else jax.lax.scan
+    x = params["embed"][tokens].astype(adt)
+    aux_total = jnp.float32(0.0)
+    new_caches = None
+    want_cache = mode in ("prefill", "decode")
+
+    if fam in ("dense", "moe"):
+        def body(carry, xs):
+            x = carry
+            lp, cache = xs
+            cache = _as_cache(cache)
+            if fam == "dense":
+                x, nc = _self_layer_fwd(x, lp, cfg, causal=True, cache=cache)
+                return x, (nc if nc is not None else jnp.zeros((0,)),
+                           jnp.float32(0.0))
+            x, nc, aux = _moe_layer_fwd(x, lp, cfg, cache=cache)
+            return x, (nc if nc is not None else jnp.zeros((0,)), aux)
+
+        if mode == "train":
+            caches_in = _none_caches(cfg.num_layers)
+            fn = _remat(cfg, body) if remat else body
+        else:
+            caches_in = caches
+            fn = body
+        x, (new_caches, auxs) = scan(
+            fn, x, (params["layers"], caches_in))
+        aux_total = auxs.sum()
+
+    elif fam == "vlm":
+        assert vision_embeds is not None
+        vis = vision_embeds.astype(adt)
+
+        def stage(carry, xs):
+            x = carry
+            sp, cache = xs
+
+            def inner(c2, xs2):
+                lp, lc = xs2
+                lc = _as_cache(lc)
+                y, nc = _self_layer_fwd(c2, lp, cfg, causal=True, cache=lc)
+                return y, nc if nc is not None else jnp.zeros((0,))
+            x, ncs = scan(inner, x, (sp["self"], cache))
+            x = _cross_layer_fwd(x, sp["cross"], cfg, vis)
+            return x, ncs
+
+        n_stages = cfg.num_layers // cfg.cross_attn_period
+        n_self = cfg.cross_attn_period - 1
+        if mode == "train":
+            caches_in = _none_caches((n_stages, n_self))
+            fn = _remat(cfg, stage) if remat else stage
+        else:
+            caches_in = caches
+            fn = stage
+        x, new_caches = scan(fn, x, (params["stages"], caches_in))
+
+    elif fam == "audio":
+        if mode == "decode" and isinstance(caches, tuple):
+            caches, enc = caches  # encoder output cached at prefill
+        else:
+            assert audio_frames is not None
+            pos_tab = params["enc_pos"]
+            nf = audio_frames.shape[1]
+            if nf <= pos_tab.shape[0]:
+                pos = pos_tab[None, :nf]
+            else:  # longer-than-table stub inputs: tile the table
+                reps = -(-nf // pos_tab.shape[0])
+                pos = jnp.tile(pos_tab, (reps, 1))[None, :nf]
+            enc = audio_frames.astype(adt) + pos.astype(adt)
+
+            def enc_body(carry, lp):
+                y, _ = _self_layer_fwd(carry, lp, cfg, causal=False, glu=False)
+                return y, None
+            enc, _ = scan(enc_body, enc, params["enc_layers"])
+            enc = L.rms_norm(enc, params["enc_ln_f"], cfg.norm_eps)
+
+        B, Nf, _ = enc.shape
+        KV, Dh = cfg.num_kv_heads, cfg.head_dim
+
+        def dec_body(carry, xs):
+            x = carry
+            lp, cache = xs
+            cache = _as_cache(cache)
+            h, nc, _ = A.attention_block(
+                L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+                causal=True, cache=cache)
+            x = x + h
+            k = L.linear(enc, lp["xattn"]["wk"]).reshape(B, Nf, KV, Dh)
+            v = L.linear(enc, lp["xattn"]["wv"]).reshape(B, Nf, KV, Dh)
+            h, _, _ = A.attention_block(
+                L.rms_norm(x, lp["ln_x"], cfg.norm_eps), lp["xattn"], cfg,
+                causal=False, kv_override=(k, v), use_rope=False)
+            x = x + h
+            x = x + L.gelu_mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+            return x, nc if nc is not None else jnp.zeros((0,))
+
+        caches_in = caches if want_cache else _none_caches(cfg.num_layers)
+        fn = dec_body if (want_cache or not remat) else _remat(cfg, dec_body)
+        x, new_caches = scan(fn, x, (params["layers"], caches_in))
+        if want_cache:
+            new_caches = (new_caches, enc)
+
+    elif fam == "hybrid":
+        x, new_caches, aux_total = _forward_hybrid(cfg, params, x, mode,
+                                                   caches, scan)
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, st = xs
+            x, new_st = SSM.rwkv_block(x, lp, cfg, st)
+            return x, new_st
+
+        states_in = caches if caches is not None else jax.vmap(
+            lambda _: SSM.init_rwkv_state(x.shape[0], cfg, adt))(
+                jnp.arange(cfg.num_layers))
+        fn = body if mode != "train" else (_remat(cfg, body) if remat else body)
+        x, new_caches = scan(fn, x, (params["layers"], states_in))
+
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if logits_for == "none":
+        return Output(None, new_caches, aux_total, hidden=x)
+    w_un = unembed_matrix(cfg, params)
+    if logits_for == "last":
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], w_un.astype(adt))[:, None]
+    else:
+        logits = jnp.einsum("bnd,dv->bnv", x, w_un.astype(adt))
+    return Output(logits.astype(jnp.float32), new_caches, aux_total, hidden=x)
+
+
+def _forward_hybrid(cfg, params, x, mode, caches, scan=jax.lax.scan):
+    """zamba2: stages of ``period`` mamba layers + one shared attn block."""
+    adt = x.dtype
+    period = cfg.attn_layer_period
+    n_stages = cfg.num_layers // period
+    rem = cfg.num_layers - n_stages * period
+    B = x.shape[0]
+
+    if caches is None:
+        mamba_states = jax.vmap(
+            lambda _: jax.vmap(lambda __: SSM.init_mamba_state(B, cfg, adt))(
+                jnp.arange(period)))(jnp.arange(n_stages))
+        tail_states = (jax.vmap(lambda _: SSM.init_mamba_state(B, cfg, adt))(
+            jnp.arange(rem)) if rem else None)
+        attn_caches = None  # train mode: no KV cache
+    else:
+        mamba_states, tail_states, attn_caches = caches
+
+    sp_shared = params["shared_attn"]
+
+    def stage(carry, xs):
+        x = carry
+        sp, states, acache = xs
+        acache = _as_cache(acache)
+
+        def inner(c2, xs2):
+            lp, st = xs2
+            y, new_st = SSM.mamba_block(
+                L.rms_norm(c2, lp["ln"], cfg.norm_eps), lp["mamba"], cfg, st)
+            return c2 + y, new_st
+        x, new_states = scan(inner, x, (sp, states))
+        x, new_acache = _self_layer_fwd(x, sp_shared, cfg, causal=True,
+                                        cache=acache)
+        return x, (new_states, new_acache)
+
+    acaches_in = attn_caches if attn_caches is not None else _none_caches(n_stages)
+    x, (new_mamba, new_attn) = scan(
+        stage, x, (params["stages"], mamba_states, acaches_in))
+
+    new_tail = None
+    if rem:
+        def tail_body(c2, xs2):
+            lp, st = xs2
+            y, new_st = SSM.mamba_block(
+                L.rms_norm(c2, lp["ln"], cfg.norm_eps), lp["mamba"], cfg, st)
+            return c2 + y, new_st
+        x, new_tail = scan(tail_body, x, (params["tail"], tail_states))
+
+    return x, (new_mamba, new_tail, new_attn), jnp.float32(0.0)
+
+
+def _none_caches(shape):
+    """Scan-compatible 'no cache' placeholder: scan xs need a leading axis,
+    so 'no cache' is a zero-width marker array that ``_as_cache`` maps back
+    to None inside the scan body (shapes are static, so this is free)."""
+    if isinstance(shape, tuple):
+        return jnp.zeros(shape + (0,))  # nested per-stage marker
+    return jnp.zeros((shape, 0))
+
+
+def _as_cache(c):
+    if c is None:
+        return None
+    if isinstance(c, jnp.ndarray) and c.ndim >= 1 and c.shape[-1] == 0:
+        return None
+    return c
+
+
+# ===========================================================================
+# ViT forward (the paper's model) — Python loop, supports TDM
+# ===========================================================================
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """images: [B, H, W, 3] -> [B, N, patch*patch*3]."""
+    B, H, W, C = images.shape
+    ph, pw = H // patch, W // patch
+    x = images.reshape(B, ph, patch, pw, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, ph * pw, patch * patch * C)
+    return x
+
+
+def forward_vit(cfg: ModelConfig, params: Dict, patches: jax.Array,
+                use_tdm: Optional[bool] = None) -> Output:
+    """patches: [B, N, P²·3] (pre-patchified; use ``patchify`` on images).
+
+    Applies the TDM at ``cfg.pruning.tdm_layers`` when token pruning is
+    enabled — token counts shrink statically layer by layer."""
+    p = cfg.pruning
+    if use_tdm is None:
+        use_tdm = p.token_pruning_enabled
+    adt = jnp.dtype(cfg.dtype)
+
+    x = L.linear(patches.astype(adt), params["patch_embed"],
+                 params["patch_bias"])
+    B, N, D = x.shape
+    cls = jnp.broadcast_to(params["cls"].astype(adt), (B, 1, D))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"][None, : N + 1].astype(adt)
+
+    for i, lp in enumerate(params["layers"]):
+        has_tdm = use_tdm and (i in p.tdm_layers)
+        h = L.layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        h, _, tdm_scores = A.attention_block(
+            h, lp["attn"], cfg, causal=False, use_rope=False,
+            collect_scores=has_tdm, score_row=0)
+        x = x + h
+        if has_tdm:
+            x, _ = TP.tdm(x, tdm_scores, p.r_t, has_cls=True)
+        h = L.layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["mlp"])
+
+    x = L.layer_norm(x, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
+    logits = L.linear(x[:, 0], params["head"])
+    return Output(logits.astype(jnp.float32))
+
+
+# ===========================================================================
+# Losses
+# ===========================================================================
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 ignore: int = -1) -> jax.Array:
+    """Mean token-level cross entropy; ``labels == ignore`` masked out."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels != ignore
+    safe = jnp.where(valid, labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -(ll * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+def chunked_lm_xent(cfg: ModelConfig, params, hidden: jax.Array,
+                    labels: jax.Array, chunk: int = 1024,
+                    unroll: bool = False) -> jax.Array:
+    """Next-token CE without materializing [B, S, V] logits: scan over
+    sequence chunks, fusing unembed + log-softmax + gather per chunk.
+    Memory peak per chunk: [B, chunk, V] — a 256× reduction at S=4k/V=256k
+    relative to whole-sequence logits (§Perf memory-term lever)."""
+    B, S, D = hidden.shape
+    w_un = unembed_matrix(cfg, params)
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = (-S) % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+    n = S // chunk
+    hc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        logits = jnp.einsum("bnd,dv->bnv", h, w_un.astype(h.dtype)
+                            ).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lab != -1
+        safe = jnp.where(valid, lab, 0)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (tot - (ll * valid).sum(), cnt + valid.sum()), None
+
+    scan = _unrolled_scan if unroll else jax.lax.scan
+    (tot, cnt), _ = scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, rng=None,
+            unroll: bool = False) -> Tuple[jax.Array, Dict]:
+    out = forward_lm(cfg, params, batch["tokens"], mode="train",
+                     vision_embeds=batch.get("vision_embeds"),
+                     audio_frames=batch.get("audio_frames"),
+                     logits_for="none", unroll=unroll)
+    labels = jnp.concatenate(
+        [batch["tokens"][:, 1:],
+         jnp.full_like(batch["tokens"][:, :1], -1)], axis=1)
+    loss = chunked_lm_xent(cfg, params, out.hidden, labels,
+                           chunk=cfg.loss_chunk, unroll=unroll)
+    total = loss + 0.01 * out.aux_loss
+    return total, {"ce": loss, "aux": out.aux_loss}

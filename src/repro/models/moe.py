@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-based grouped dispatch.
+
+Grouped matmul (megablocks-style, GShard-capacity variant): tokens are
+sorted by assigned expert and gathered into a dense ``[E, C, D]`` buffer so
+expert FFNs run as one batched einsum — compute scales with *active* experts
+only (the 6·N_active·D roofline), shapes stay static, and the whole thing
+shards cleanly with experts on the "model" mesh axis (EP).
+
+Block-wise weight pruning applies per-expert (the paper's MLP column/row
+pruning generalizes expert-wise; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear
+
+
+def init_moe_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    E = cfg.moe_num_experts_padded  # weight banks padded for EP sharding
+    ks = jax.random.split(key, 5)
+    p = {
+        # router logits cover only the REAL experts; padded bank rows idle
+        "router": dense_init(ks[0], d, cfg.moe_num_experts, dtype),
+        "wg": jax.vmap(lambda k: dense_init(k, d, ff, dtype))(
+            jax.random.split(ks[1], E)),
+        "wi": jax.vmap(lambda k: dense_init(k, d, ff, dtype))(
+            jax.random.split(ks[2], E)),
+        "wo": jax.vmap(lambda k: dense_init(k, ff, d, dtype))(
+            jax.random.split(ks[3], E)),
+    }
+    shared_ff = cfg.moe_shared_d_ff or (cfg.d_ff * cfg.moe_num_shared)
+    if shared_ff:
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": dense_init(sks[0], d, shared_ff, dtype),
+            "wi": dense_init(sks[1], d, shared_ff, dtype),
+            "wo": dense_init(sks[2], shared_ff, d, dtype),
+        }
+    return p
+
+
+def moe_capacity(num_tokens: int, num_experts: int, top_k: int,
+                 capacity_factor: float = 1.25) -> int:
+    c = math.ceil(num_tokens * top_k / num_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_ffn(x: jax.Array, p: Dict, cfg,
+            capacity_factor: float | None = None) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D]. Returns (y, aux_loss).
+
+    Dispatch: flatten tokens, route top-k, sort (token, slot) pairs by
+    expert, place each into its expert's capacity buffer (overflow dropped —
+    standard GShard semantics), run the grouped FFN, scatter-add back.
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    E_pad = cfg.moe_num_experts_padded
+    T = B * S
+    xf = x.reshape(T, D)
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+
+    logits = linear(xf, p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)                      # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (T * K))                            # fraction routed per expert
+    aux = E * jnp.sum(me * ce)
+
+    C = moe_capacity(T, E, K, capacity_factor)
+
+    flat_expert = expert_idx.reshape(-1)          # [T*K]
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+
+    # position of each (token, k) within its expert group
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank within group = index - start offset of that expert
+    counts = jnp.zeros((E,), jnp.int32).at[sorted_expert].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - starts[sorted_expert]
+    valid = rank < C
+
+    # gather tokens into [E_pad, C, D] (padding experts receive nothing —
+    # router logits only cover the E real experts)
+    buf = jnp.zeros((E_pad, C, D), xf.dtype)
+    buf = buf.at[sorted_expert, jnp.where(valid, rank, 0)].add(
+        jnp.where(valid[:, None], xf[sorted_token], 0.0))
+
+    # grouped expert FFN: [E, C, D] x [E, D, F] -> [E, C, F]
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(buf.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(buf.dtype))
+    y_e = jnp.einsum("ecf,efd->ecd", g * u, p["wo"].astype(buf.dtype))
+
+    # scatter back with gate weighting
+    gathered = y_e[sorted_expert, jnp.where(valid, rank, 0)]
+    gathered = jnp.where(valid[:, None], gathered, 0.0)
+    yf = jnp.zeros((T, D), xf.dtype).at[sorted_token].add(
+        gathered * sorted_gate[:, None].astype(xf.dtype))
+
+    if "shared" in p:
+        sh = p["shared"]
+        g = jax.nn.silu(linear(xf, sh["wg"]))
+        u = linear(xf, sh["wi"])
+        yf = yf + linear(g * u, sh["wo"])
+
+    return yf.reshape(B, S, D), aux

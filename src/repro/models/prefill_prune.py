@@ -1,0 +1,93 @@
+"""Token-pruned LM prefill — the paper's TDM adapted to causal prompts.
+
+For a decoder-only LM, prefill is encoder-like from the viewpoint of the
+*last* position: intermediate prompt tokens that receive little attention
+from the scoring row contribute little to the next-token prediction. The
+TDM therefore drops inattentive prompt tokens at ``cfg.pruning.tdm_layers``
+using the LAST-token attention row (the CLS analog), fusing the dropped
+remainder into one carrier token, exactly as the paper fuses inattentive
+image patches.
+
+RoPE positions are preserved through the drops (tokens keep their original
+absolute positions; the fused token inherits the last dropped position), so
+the retained computation is identical to the dense path restricted to kept
+tokens.
+
+Python-loop (shape changes per TDM layer preclude scan) over per-layer
+slices of the stacked params. Dense / qk-norm GQA families supported —
+SSM/hybrid are excluded (recurrence, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import token_pruning as TP
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def pruned_prefill_logits(cfg: ModelConfig, params: Dict,
+                          tokens: jax.Array) -> Tuple[jax.Array, int]:
+    """Last-position logits with TDM active during prefill.
+
+    Returns (logits [B, vocab], n_tokens_final). Supported: family=="dense"
+    (plain or qk-norm GQA)."""
+    assert cfg.family == "dense", "prefill TDM: dense LMs only"
+    p = cfg.pruning
+    adt = jnp.dtype(cfg.dtype)
+    B, N = tokens.shape
+    x = params["embed"][tokens].astype(adt)
+    positions = jnp.broadcast_to(jnp.arange(N), (B, N))
+
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        has_tdm = p.token_pruning_enabled and i in p.tdm_layers
+        h, _, scores = A.attention_block(
+            L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+            causal=True, positions=positions,
+            collect_scores=has_tdm, score_row=-1)
+        x = x + h
+        x = x + L.glu_mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        if has_tdm:
+            x, positions = _tdm_causal(x, positions, scores, p.r_t)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w_un = M.unembed_matrix(cfg, params)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_un.astype(adt))
+    return logits.astype(jnp.float32), x.shape[1]
+
+
+def _tdm_causal(x: jax.Array, positions: jax.Array, scores: jax.Array,
+                r_t: float) -> Tuple[jax.Array, jax.Array]:
+    """TDM for causal prompts: ALWAYS keep the last token (the predictor),
+    drop/fuse among the rest, preserve temporal order and RoPE positions."""
+    B, N, D = x.shape
+    body = x[:, :-1]
+    body_pos = positions[:, :-1]
+    s_body = scores[:, :-1]
+    k = max(1, math.ceil((N - 1) * r_t))
+
+    top_vals, top_idx = jax.lax.top_k(s_body, k)
+    top_idx = jnp.sort(top_idx, axis=-1)  # temporal order for causality
+    kept = jnp.take_along_axis(body, top_idx[..., None], axis=1)
+    kept_pos = jnp.take_along_axis(body_pos, top_idx, axis=1)
+
+    keep_mask = jnp.zeros((B, N - 1), bool)
+    keep_mask = jnp.put_along_axis(keep_mask, top_idx, True, axis=1,
+                                   inplace=False)
+    w = jnp.where(keep_mask, 0.0, s_body.astype(jnp.float32))
+    w = w / (w.sum(axis=1, keepdims=True) + 1e-9)
+    fused = jnp.einsum("bn,bnd->bd", w.astype(x.dtype), body)
+    # the fused token sits just before the predictor, at the last kept+1 pos
+    fused_pos = jnp.max(jnp.where(keep_mask, body_pos, 0), axis=1) + 0
+
+    x_out = jnp.concatenate([kept, fused[:, None], x[:, -1:]], axis=1)
+    pos_out = jnp.concatenate(
+        [kept_pos, fused_pos[:, None], positions[:, -1:]], axis=1)
+    return x_out, pos_out

@@ -1,0 +1,160 @@
+"""Glue between the paper's pruning (core/) and the model zoo: identify
+prunable weights in a param pytree, create score parameters, and produce
+masked params for the forward pass (STE-differentiable w.r.t. scores).
+
+Prunable groups (DESIGN.md §Arch-applicability):
+  * attention projections  wq/wk/wv (block scores)  + wo (block scores)
+  * MLP / expert FFN       wi,wg (column score vector), wo (row score vector)
+  * everything else (embeddings, norms, router, conv, SSM gathers) is dense.
+
+Stacked layer axes are handled with vmap: a weight [L, M1, M2] owns scores
+[L, m, n] and top-k is per (layer, matrix), as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import block_pruning as BP
+
+# param-tree key -> pruning kind
+_ATTN_KEYS = {"wq": "block", "wk": "block", "wv": "block", "wo": "block"}
+_MLP_COL = {"wi", "wg", "cm_wk"}
+_MLP_ROW = {"wo", "cm_wv"}
+
+
+def _is_attn_ctx(path) -> bool:
+    keys = [getattr(p, "key", None) for p in path]
+    return any(k in ("attn", "xattn", "shared_attn") for k in keys)
+
+
+def _is_mlp_ctx(path) -> bool:
+    keys = [getattr(p, "key", None) for p in path]
+    return any(k in ("mlp", "moe", "shared") for k in keys) or any(
+        k in ("cm_wk", "cm_wv") for k in keys)
+
+
+def _leaf_key(path) -> str:
+    return getattr(path[-1], "key", "")
+
+
+def prunable_kind(path, leaf) -> str | None:
+    """Return "block" | "col" | "row" | None for a param leaf."""
+    if leaf.ndim < 2:
+        return None
+    k = _leaf_key(path)
+    if _is_attn_ctx(path) and k in _ATTN_KEYS:
+        return "block"
+    if _is_mlp_ctx(path):
+        if k in _MLP_COL:
+            return "col"
+        if k in _MLP_ROW:
+            return "row"
+    return None
+
+
+def init_scores(cfg: ModelConfig, params: Dict, key: jax.Array) -> Dict:
+    """Score pytree: same structure as params but only at prunable leaves
+    (other positions hold None, pruned from the pytree)."""
+    b = cfg.pruning.block_size
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for i, (path, leaf) in enumerate(flat):
+        kind = prunable_kind(path, leaf)
+        if kind is None:
+            continue
+        k = jax.random.fold_in(key, i)
+        if leaf.ndim == 2:
+            s = BP.init_scores_for(leaf, b, kind, k)
+        else:
+            # stacked [L, ..., M1, M2]: vmap the init over leading axes
+            lead = leaf.shape[:-2]
+            w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+            ks = jax.random.split(k, w2.shape[0])
+            s = jnp.stack([BP.init_scores_for(w2[j], b, kind, ks[j])
+                           for j in range(w2.shape[0])])
+            s = s.reshape(lead + s.shape[1:])
+        out[_path_str(path)] = s
+    return out
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def apply_pruning(cfg: ModelConfig, params: Dict, scores: Dict,
+                  r_b: float | None = None) -> Dict:
+    """Masked params for the forward pass (STE-differentiable in scores)."""
+    p = cfg.pruning
+    if r_b is None:
+        r_b = p.r_b
+    if r_b >= 1.0 or not scores:
+        return params
+    b = p.block_size
+
+    def mask_one(w, s, kind):
+        if kind == "block":
+            return BP.masked_weight(w, s, r_b, b)
+        axis = 1 if kind == "col" else 0
+        return BP.masked_weight_vector(w, s, r_b, axis)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    new_leaves = []
+    for path, leaf in flat:
+        kind = prunable_kind(path, leaf)
+        ps = _path_str(path)
+        if kind is None or ps not in scores:
+            new_leaves.append(leaf)
+            continue
+        if not ((kind == "block" and not p.prune_msa)
+                or (kind in ("col", "row") and not p.prune_mlp)):
+            s = scores[ps]
+            if leaf.ndim == 2:
+                leaf = mask_one(leaf, s, kind)
+            else:
+                lead = leaf.shape[:-2]
+                w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+                s2 = s.reshape((-1,) + s.shape[len(lead):])
+                fn = lambda ww, ss: mask_one(ww, ss, kind)
+                leaf = jax.vmap(fn)(w2, s2).reshape(leaf.shape)
+        new_leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def regularizer(scores: Dict) -> jax.Array:
+    """Eq. 8: Σ σ(S) over all score tensors (λ applied by caller)."""
+    return BP.sparsity_regularizer(scores)
+
+
+def hard_masks(cfg: ModelConfig, params: Dict, scores: Dict) -> Dict:
+    """Non-STE binary block masks for packing / size accounting."""
+    p = cfg.pruning
+    b = p.block_size
+    out = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        kind = prunable_kind(path, leaf)
+        ps = _path_str(path)
+        if kind is None or ps not in scores:
+            continue
+        s = scores[ps]
+        if kind == "block":
+            if leaf.ndim == 2:
+                out[ps] = BP.hard_block_mask(s, p.r_b, leaf.shape, b)
+            else:
+                w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+                s2 = s.reshape((-1,) + s.shape[-2:])
+                out[ps] = jnp.stack([
+                    BP.hard_block_mask(s2[j], p.r_b, w2[j].shape, b)
+                    for j in range(w2.shape[0])]).reshape(
+                        leaf.shape[:-2] + s.shape[-2:])
+    return out

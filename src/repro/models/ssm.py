@@ -1,0 +1,315 @@
+"""State-space / recurrent token mixers: Mamba2 (zamba2 hybrid) and RWKV6.
+
+Both are attention-free and sub-quadratic: training runs a time scan carrying
+recurrent state; decode is a single O(1)-per-token state update, which is why
+these archs (and only these) run the ``long_500k`` shape.
+
+The paper's token pruning is inapplicable here (dropping a token mid-sequence
+corrupts the recurrent state — DESIGN.md §Arch-applicability); static block
+weight pruning applies to every projection below.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear, rms_norm
+
+
+# ===========================================================================
+# Mamba2 (SSD, scalar-identity A per head)
+# ===========================================================================
+class MambaState(NamedTuple):
+    h: jax.Array     # [B, H, Dh, State]
+    conv: jax.Array  # [B, ConvW-1, D_inner] rolling conv buffer
+
+
+def mamba_head_dim() -> int:
+    return 64
+
+
+def init_mamba_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    state = cfg.ssm_state
+    H = inner // mamba_head_dim()
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * state + H, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv_width, inner), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(ks[2], inner, d, dtype),
+    }
+
+
+def init_mamba_state(batch: int, cfg, dtype=jnp.float32) -> MambaState:
+    inner = cfg.ssm_expand * cfg.d_model
+    H = inner // mamba_head_dim()
+    return MambaState(
+        h=jnp.zeros((batch, H, mamba_head_dim(), cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, inner), dtype),
+    )
+
+
+def _mamba_split(x, p, cfg):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    state = cfg.ssm_state
+    H = inner // mamba_head_dim()
+    zxbcdt = linear(x, p["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + state, 2 * inner + 2 * state],
+        axis=-1)
+    return z, xs, Bm, Cm, dt, inner, state, H
+
+
+def mamba_block(x: jax.Array, p: Dict, cfg,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """x: [B, S, D]. Full-sequence scan (training / prefill).
+
+    If ``state`` is given it is consumed as the initial state and the final
+    state is returned (chunked prefill / decode continuation)."""
+    B, S, D = x.shape
+    z, xs, Bm, Cm, dt, inner, n_state, H = _mamba_split(x, p, cfg)
+    dh = mamba_head_dim()
+
+    if state is None:
+        state = init_mamba_state(B, cfg, x.dtype)
+
+    # causal depthwise conv over the x-branch with carried buffer
+    conv_in = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    W = cfg.ssm_conv_width
+    xs_conv = sum(conv_in[:, i:i + S, :] * p["conv_w"][i].astype(xs.dtype)
+                  for i in range(W))
+    xs_conv = jax.nn.silu(xs_conv)
+    new_conv = conv_in[:, S:S + W - 1, :] if S >= W - 1 else conv_in[:, -(W - 1):, :]
+
+    xh = xs_conv.reshape(B, S, H, dh)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    decay = jnp.exp(dt_sp * A)                                   # [B,S,H]
+
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dt_t, dec_t, b_t, c_t = t
+        # h: [B,H,dh,state]
+        upd = (dt_t[..., None, None] * xt.astype(jnp.float32)[..., None]
+               * b_t[:, None, None, :])
+        h = h * dec_t[..., None, None] + upd
+        y = jnp.einsum("bhds,bs->bhd", h, c_t)
+        return h, y
+
+    xs_t = jnp.moveaxis(xh, 1, 0)        # [S,B,H,dh]
+    dt_t = jnp.moveaxis(dt_sp, 1, 0)     # [S,B,H]
+    dec_t = jnp.moveaxis(decay, 1, 0)
+    b_t = jnp.moveaxis(Bf, 1, 0)         # [S,B,state]
+    c_t = jnp.moveaxis(Cf, 1, 0)
+    h_final, ys = jax.lax.scan(step, state.h, (xs_t, dt_t, dec_t, b_t, c_t))
+    y = jnp.moveaxis(ys, 0, 1)           # [B,S,H,dh]
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    return out, MambaState(h_final, new_conv.astype(state.conv.dtype))
+
+
+# ===========================================================================
+# RWKV6 ("Finch": data-dependent decay)
+# ===========================================================================
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # [B, H, Dh, Dh]
+    shift_tm: jax.Array  # [B, D] last token (time-mix shift)
+    shift_cm: jax.Array  # [B, D] last token (channel-mix shift)
+
+
+def rwkv_head_dim(cfg) -> int:
+    return cfg.d_model // cfg.num_heads
+
+
+def init_rwkv_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    return {
+        "mix_r": 0.5 * jnp.ones((d,), dtype),
+        "mix_k": 0.5 * jnp.ones((d,), dtype),
+        "mix_v": 0.5 * jnp.ones((d,), dtype),
+        "mix_w": 0.5 * jnp.ones((d,), dtype),
+        "mix_g": 0.5 * jnp.ones((d,), dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "ww": dense_init(ks[4], d, d, dtype),  # data-dependent decay proj
+        "w_bias": -6.0 * jnp.ones((d,), dtype),
+        "u": 0.1 * jax.random.normal(ks[5], (cfg.num_heads, rwkv_head_dim(cfg)), dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mix_k": 0.5 * jnp.ones((d,), dtype),
+        "cm_wk": dense_init(ks[7], d, ff, dtype),
+        "cm_wv": dense_init(ks[8], ff, d, dtype),
+        # pre-norms for the two sublayers
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+    }
+
+
+def init_rwkv_state(batch: int, cfg, dtype=jnp.float32) -> RWKVState:
+    H = cfg.num_heads
+    dh = rwkv_head_dim(cfg)
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def _token_shift(x, last):
+    """x: [B,S,D]; last: [B,D] (previous token). Returns shifted x."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(x: jax.Array, p: Dict, cfg, state: RWKVState,
+                  chunk: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``chunk=0``: sequential per-token scan (the oracle). ``chunk=C>0``:
+    flash-linear-attention chunking — the WKV state stays register/VMEM
+    resident for C steps and is materialized once per chunk instead of per
+    token (the §Perf C2 lever: state HBM traffic ÷ C, at the cost of an
+    intra-chunk [C×C] attention-like term)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = rwkv_head_dim(cfg)
+    xp = _token_shift(x, state.shift_tm)
+
+    def mixed(mix):
+        m = p[mix].astype(x.dtype)
+        return x * m + xp * (1 - m)
+
+    r = linear(mixed("mix_r"), p["wr"]).reshape(B, S, H, dh)
+    k = linear(mixed("mix_k"), p["wk"]).reshape(B, S, H, dh)
+    v = linear(mixed("mix_v"), p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(linear(mixed("mix_g"), p["wg"]))
+    # data-dependent decay (Finch): w in (0,1), per channel per step
+    w_raw = linear(mixed("mix_w"), p["ww"]) + p["w_bias"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32))).reshape(B, S, H, dh)
+
+    u = p["u"].astype(jnp.float32)  # [H, dh]
+
+    if chunk and S % chunk == 0 and S > chunk:
+        y, s_final = _wkv_chunked(r, k, v, w, u, state.wkv, chunk)
+    else:
+        y, s_final = _wkv_sequential(r, k, v, w, u, state.wkv)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = linear(y, p["wo"])
+    return out, s_final, x[:, -1, :]
+
+
+def _wkv_sequential(r, k, v, w, u, s0):
+    B, S, H, dh = r.shape
+
+    def step(s, t):
+        r_t, k_t, v_t, w_t = t  # [B,H,dh] each
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        kv = kf[..., :, None] * vf[..., None, :]          # [B,H,dh,dh]
+        y = jnp.einsum("bhd,bhde->bhe",
+                       r_t.astype(jnp.float32), s + u[None, :, :, None] * kv)
+        s = s * w_t.astype(jnp.float32)[..., None] + kv
+        return s, y
+
+    rt = jnp.moveaxis(r, 1, 0)
+    kt = jnp.moveaxis(k, 1, 0)
+    vt = jnp.moveaxis(v, 1, 0)
+    wt = jnp.moveaxis(w, 1, 0)
+    s_final, ys = jax.lax.scan(step, s0, (rt, kt, vt, wt))
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+def _wkv_chunked(r, k, v, w, u, s0, C: int):
+    """Flash-linear-attention chunking of the RWKV6 recurrence.
+
+    With S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ and y_t = r_t·(S_{t-1} + u⊙k_t v_tᵀ):
+      P_t   = Π_{u<t} w_u                  (exclusive cumprod inside a chunk)
+      y_t   = (r_t⊙P_t)·S_chunk0                            [inter]
+            + Σ_{s<t} (r_t⊙P_t)·(k_s/P_{s+1}) v_sᵀ          [intra, causal]
+            + (r_t⊙u⊙k_t)·v_tᵀ                              [bonus]
+      S_end = P_C ⊙ (S_chunk0 + Σ_s (k_s/P_{s+1}) v_sᵀ)
+
+    fp32 throughout; chunk sizes ≤ 64 keep k/P well conditioned for the
+    near-1 decays RWKV6 trains to."""
+    B, S, H, dh = r.shape
+    n = S // C
+    rf = r.astype(jnp.float32).reshape(B, n, C, H, dh)
+    kf = k.astype(jnp.float32).reshape(B, n, C, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, n, C, H, dh)
+    wf = w.astype(jnp.float32).reshape(B, n, C, H, dh)
+
+    # move chunk axis first for scan
+    rf, kf, vf, wf = (jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+
+    def chunk_step(s, t):
+        rc, kc, vc, wc = t  # [B, C, H, dh]
+        P_excl = jnp.concatenate(
+            [jnp.ones_like(wc[:, :1]), jnp.cumprod(wc, axis=1)[:, :-1]],
+            axis=1)                                     # P_t = prod_{u<t} w_u
+        P_incl = P_excl * wc                            # prod_{u<=t}
+        r_dec = rc * P_excl                             # [B,C,H,dh]
+        k_gro = kc / jnp.maximum(P_incl, 1e-20)         # k_s / P_{s+1}
+
+        # inter-chunk: r_dec · S0
+        y_inter = jnp.einsum("bchd,bhde->bche", r_dec, s)
+        # intra-chunk causal linear attention
+        A = jnp.einsum("bchd,bshd->bhcs", r_dec, k_gro)  # [B,H,C,C]
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)    # strictly lower
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhcs,bshe->bche", A, vc)
+        # bonus (current token): (r_t ⊙ u ⊙ k_t summed over d) · v_t
+        y_bonus = (rc * u[None, None] * kc).sum(-1)[..., None] * vc
+
+        y = y_inter + y_intra + y_bonus
+        # carry state
+        kv_sum = jnp.einsum("bshd,bshe->bhde", k_gro, vc)
+        Pc = P_incl[:, -1]                               # [B,H,dh]
+        s_new = Pc[..., None] * (s + kv_sum)
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(chunk_step, s0, (rf, kf, vf, wf))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dh)
+    return y, s_final
+
+
+def rwkv_channel_mix(x: jax.Array, p: Dict, cfg, state: RWKVState
+                     ) -> Tuple[jax.Array, jax.Array]:
+    xp = _token_shift(x, state.shift_cm)
+    m = p["cm_mix_k"].astype(x.dtype)
+    xk = x * m + xp * (1 - m)
+    h = jnp.square(jax.nn.relu(linear(xk, p["cm_wk"])))
+    return linear(h, p["cm_wv"]), x[:, -1, :]
+
+
+def rwkv_block(x: jax.Array, p: Dict, cfg,
+               state: Optional[RWKVState] = None
+               ) -> Tuple[jax.Array, RWKVState]:
+    """One RWKV6 layer (time-mix + channel-mix, pre-LN residuals are applied
+    by the caller). Returns (y_tm + y_cm combined residual stream, state)."""
+    B = x.shape[0]
+    if state is None:
+        state = init_rwkv_state(B, cfg, x.dtype)
+    y_tm, wkv, last_tm = rwkv_time_mix(
+        rms_norm(x, p["ln1"], cfg.norm_eps), p, cfg, state,
+        chunk=getattr(cfg, "rwkv_chunk", 0))
+    x2 = x + y_tm
+    y_cm, last_cm = rwkv_channel_mix(
+        rms_norm(x2, p["ln2"], cfg.norm_eps), p, cfg, state)
+    out = x2 + y_cm
+    return out, RWKVState(wkv, last_tm, last_cm)

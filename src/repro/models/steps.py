@@ -1,0 +1,216 @@
+"""Step functions: train_step / prefill / decode for every family, plus the
+cache constructors and ShapeDtypeStruct input specs used by the dry-run.
+
+These are the functions that get ``jax.jit(...).lower().compile()``'d against
+the production mesh — they are the unit of the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as A
+from repro.models import ssm as SSM
+from repro.models import model as M
+from repro.models import pruning_glue as PG
+from repro.optim.adamw import AdamW, AdamWState
+
+
+# ===========================================================================
+# Cache constructors
+# ===========================================================================
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Any:
+    """Stacked (scan-ready) serve caches for ``cfg``."""
+    fam = cfg.family
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+
+    def kv_stack(n):
+        return jax.vmap(lambda _: A.init_kv_cache(batch, max_len, kv, dh,
+                                                  dtype))(jnp.arange(n))
+
+    if fam in ("dense", "moe"):
+        return kv_stack(cfg.num_layers)
+    if fam == "vlm":
+        n_stages = cfg.num_layers // cfg.cross_attn_period
+        n_self = cfg.cross_attn_period - 1
+        return jax.vmap(lambda _: kv_stack(n_self))(jnp.arange(n_stages))
+    if fam == "audio":
+        # decoder self caches; encoder output is attached at prefill
+        return kv_stack(cfg.num_layers)
+    if fam == "hybrid":
+        period = cfg.attn_layer_period
+        n_stages = cfg.num_layers // period
+        rem = cfg.num_layers - n_stages * period
+        mamba = jax.vmap(lambda _: jax.vmap(
+            lambda __: SSM.init_mamba_state(batch, cfg, dtype))(
+                jnp.arange(period)))(jnp.arange(n_stages))
+        tail = (jax.vmap(lambda _: SSM.init_mamba_state(batch, cfg, dtype))(
+            jnp.arange(rem)) if rem else None)
+        attn = kv_stack(n_stages)
+        return (mamba, tail, attn)
+    if fam == "ssm":
+        return jax.vmap(lambda _: SSM.init_rwkv_state(batch, cfg, dtype))(
+            jnp.arange(cfg.num_layers))
+    raise ValueError(fam)
+
+
+def set_cache_length(cfg: ModelConfig, caches: Any, length) -> Any:
+    """Mark ``length`` tokens of every KV cache as valid (used to build the
+    decode-shape dry-run state: 'a KV cache of seq_len')."""
+    def fix(c):
+        if isinstance(c, A.KVCache):
+            return c._replace(length=jnp.broadcast_to(
+                jnp.asarray(length, jnp.int32), c.length.shape))
+        return c
+    is_leaf = lambda x: isinstance(x, A.KVCache)
+    return jax.tree.map(fix, caches, is_leaf=is_leaf)
+
+
+# ===========================================================================
+# Input batch specs (ShapeDtypeStruct stand-ins — no allocation)
+# ===========================================================================
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one grid cell, as ShapeDtypeStructs.
+
+    train/prefill: full token batch; decode: one new token + cache handled
+    separately (see ``serve_state_specs``). Modality frontends are STUBS:
+    vision/audio entries are precomputed embeddings."""
+    B = shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        batch = {"tokens": sd((B, 1), i32)}
+    else:
+        batch = {"tokens": sd((B, S), i32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sd(
+            (B, cfg.num_vision_tokens, cfg.vision_d_model or cfg.d_model),
+            jnp.bfloat16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        # encoder consumes seq_len frames; decoder consumes tokens
+        batch["audio_frames"] = sd((B, S, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sd((B, max(S // 8, 8)), i32)  # text shorter than audio
+    return batch
+
+
+def serve_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Cache pytree spec for decode shapes (KV cache of seq_len tokens)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, jnp.bfloat16))
+    if cfg.family == "audio":
+        enc = jax.ShapeDtypeStruct((B, min(S, 4 * cfg.num_audio_frames),
+                                    cfg.d_model), jnp.bfloat16)
+        specs = (specs, enc)
+    return specs
+
+
+# ===========================================================================
+# Train step
+# ===========================================================================
+def make_train_step(cfg: ModelConfig, optimizer: Optional[AdamW] = None,
+                    with_pruning: Optional[bool] = None,
+                    unroll: bool = False):
+    """Returns ``step(params, opt_state, batch, scores=None) ->
+    (params, opt_state, metrics)``. When the paper's weight pruning is
+    enabled, ``scores`` are trained jointly (simultaneous pruning)."""
+    opt = optimizer or AdamW()
+    p = cfg.pruning
+    use_prune = p.weight_pruning_enabled if with_pruning is None else with_pruning
+
+    def loss_fn(trainables, batch):
+        wrapped = isinstance(trainables, dict) and "params" in trainables
+        params = trainables["params"] if wrapped else trainables
+        scores = trainables.get("scores") if wrapped else None
+        if use_prune and scores:
+            params = PG.apply_pruning(cfg, params, scores)
+        total, parts = M.lm_loss(cfg, params, batch, unroll=unroll)
+        if use_prune and scores:
+            total = total + p.lambda_reg * PG.regularizer(scores)
+        return total, parts
+
+    def step(params, opt_state, batch, scores=None):
+        """opt_state must be opt.init(params) when scores is None, else
+        opt.init({"params": params, "scores": scores}).
+
+        With cfg.microbatches > 1 the batch splits along dim 0 and gradients
+        accumulate over a scan — activation memory scales 1/M (the §Perf
+        memory lever for the >HBM train cells)."""
+        trainables = {"params": params, "scores": scores} if scores else params
+        M_ = cfg.microbatches
+        if M_ > 1:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(M_, B // M_, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, parts), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(trainables, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b / M_, g_acc, g)
+                return (g_acc, loss_acc + loss / M_), parts
+
+            zero = jax.tree.map(jnp.zeros_like, trainables)
+            (grads, loss), parts_stack = jax.lax.scan(
+                acc_body, (zero, jnp.float32(0.0)), micro)
+            parts = jax.tree.map(lambda x: x.mean(), parts_stack)
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                trainables, batch)
+        new_tr, new_opt = opt.update(grads, opt_state, trainables)
+        metrics = {"loss": loss, **parts}
+        if scores:
+            return (new_tr["params"], new_tr["scores"], new_opt, metrics)
+        return (new_tr, None, new_opt, metrics)
+
+    return step
+
+
+# ===========================================================================
+# Serve steps
+# ===========================================================================
+def make_prefill(cfg: ModelConfig, unroll: bool = False):
+    def prefill(params, batch, caches):
+        out = M.forward_lm(cfg, params, batch["tokens"], mode="prefill",
+                           caches=caches,
+                           vision_embeds=batch.get("vision_embeds"),
+                           audio_frames=batch.get("audio_frames"),
+                           logits_for="last", unroll=unroll)
+        next_tok = jnp.argmax(out.logits[:, -1], axis=-1)
+        return next_tok, out.caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    """One token in, one token out, caches updated in place."""
+    def decode(params, token, caches, vision_embeds=None):
+        out = M.forward_lm(cfg, params, token, mode="decode", caches=caches,
+                           vision_embeds=vision_embeds, unroll=unroll)
+        next_tok = jnp.argmax(out.logits[:, -1], axis=-1)
+        return next_tok, out.caches
+    return decode
+
+
+def make_vit_train_step(cfg: ModelConfig, optimizer: Optional[AdamW] = None):
+    """ViT classification training (no distillation; see core/simultaneous
+    for the paper's Algorithm 1)."""
+    opt = optimizer or AdamW(lr=1e-3)
+
+    def loss_fn(params, batch):
+        out = M.forward_vit(cfg, params, batch["patches"])
+        loss = M.softmax_xent(out.logits, batch["labels"])
+        return loss
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return step

@@ -1,0 +1,64 @@
+"""Gradient compression for the data-parallel axis: int8 quantization with
+error feedback (EF-SGD style residual accumulation).
+
+At 2+ pods the DP all-reduce crosses the pod interconnect; 4× smaller grads
+cut that collective's bytes 4×. Error feedback keeps the quantization
+noise from biasing convergence: the residual (g - dequant(quant(g))) is
+added back into the next step's gradient.
+
+Usage: wrap the gradient tree between value_and_grad and the optimizer
+update — ``compressed, state = compress(grads, state)`` on each host, then
+all-reduce the int8 payload (XLA does this when the arrays participate in
+psum with their int8 dtype cast back after; here we expose the quant/dequant
+pair and the train loop chooses where the collective happens).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree like grads
+
+
+def init_ef_state(grads_like: Any) -> EFState:
+    return EFState(jax.tree.map(jnp.zeros_like, grads_like))
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale
+
+
+def compress_grads(grads: Any, state: EFState
+                   ) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized tree, scales tree, new EF state)."""
+    def one(g, r):
+        g = g + r
+        q, s = quantize(g)
+        deq = dequantize(q, s, g.dtype)
+        return q, s, g - deq
+
+    qs = jax.tree.map(one, grads, state.residual)
+    # unzip the 3-tuples
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    r_tree = jax.tree.map(lambda t: t[2], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return q_tree, s_tree, EFState(r_tree)
+
+
+def decompress_grads(q_tree: Any, s_tree: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda q, s: dequantize(q, s, dtype), q_tree, s_tree)

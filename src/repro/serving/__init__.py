@@ -1,0 +1,4 @@
+from repro.serving.engine import (ServeEngine, EngineConfig, Request,
+                                  prune_kv_caches)
+
+__all__ = ["ServeEngine", "EngineConfig", "Request", "prune_kv_caches"]

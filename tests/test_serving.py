@@ -1,0 +1,75 @@
+"""Serving engine + dynamic KV pruning tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import model as M
+from repro.serving import EngineConfig, Request, ServeEngine, prune_kv_caches
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_serves_all_requests(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                    max_new_tokens=5) for i in range(5)]
+    out = eng.run(reqs)
+    assert set(out) == {0, 1, 2, 3, 4}
+    assert all(len(v) == 5 for v in out.values())
+    assert all(0 <= t < cfg.vocab_size for v in out.values() for t in v)
+
+
+def test_engine_deterministic(engine_setup):
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=64)
+    reqs = lambda: [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=4) for i in range(2)]
+    o1 = ServeEngine(cfg, params, ec).run(reqs())
+    o2 = ServeEngine(cfg, params, ec).run(reqs())
+    assert o1 == o2
+
+
+def test_kv_pruning_preserves_shapes_and_shrinks_length(engine_setup):
+    cfg, params = engine_setup
+    from repro.models import steps as ST
+    caches = ST.init_caches(cfg, 2, 32)
+    caches = ST.set_cache_length(cfg, caches, 16)
+    # fake accumulated attention mass
+    def with_mass(c):
+        if isinstance(c, A.KVCache):
+            mass = jnp.asarray(
+                np.random.default_rng(0).random(c.attn_mass.shape),
+                jnp.float32)
+            return c._replace(attn_mass=mass)
+        return c
+    caches = jax.tree.map(with_mass, caches,
+                          is_leaf=lambda x: isinstance(x, A.KVCache))
+    pruned = prune_kv_caches(caches, keep_frac=0.5)
+    flat_old = [c for c in jax.tree_util.tree_leaves(caches)]
+    flat_new = [c for c in jax.tree_util.tree_leaves(pruned)]
+    for o, n in zip(flat_old, flat_new):
+        assert o.shape == n.shape
+    # lengths shrank to <= keep
+    def check(c):
+        if isinstance(c, A.KVCache):
+            assert int(np.max(np.asarray(c.length))) <= 16
+    jax.tree.map(check, pruned, is_leaf=lambda x: isinstance(x, A.KVCache))
+
+
+def test_kv_pruned_decode_still_runs(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, kv_prune_interval=2, kv_prune_keep=0.5))
+    reqs = [Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=8)]
+    out = eng.run(reqs)
+    assert len(out[0]) == 8

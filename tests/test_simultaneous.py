@@ -1,0 +1,86 @@
+"""Algorithm 1 (simultaneous fine-pruning) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DEIT_SMALL
+from repro.core import simultaneous as SIM
+from repro.core.schedule import cubic_keep_rate
+from repro.data import DataConfig, synthetic_vit_batch
+from repro.models import model as M
+from repro.models import pruning_glue as PG
+from repro.optim import AdamW
+
+
+def test_distillation_loss_zero_when_identical():
+    logits = jnp.asarray([[1.0, 2.0, 3.0]])
+    assert float(SIM.distillation_loss(logits, logits, 4.0)) < 1e-6
+
+
+def test_distillation_loss_positive_when_different():
+    a = jnp.asarray([[1.0, 2.0, 3.0]])
+    b = jnp.asarray([[3.0, 2.0, 1.0]])
+    assert float(SIM.distillation_loss(a, b, 4.0)) > 0
+
+
+def test_simultaneous_step_trains_and_schedules(rng_key):
+    cfg = DEIT_SMALL.reduced()
+    state, opt = SIM.init_state(cfg, rng_key, AdamW(lr=2e-3))
+    teacher = M.init_params(cfg, jax.random.fold_in(rng_key, 9))
+    step = jax.jit(SIM.make_simultaneous_step(cfg, cfg, opt, total_steps=20))
+    batch = synthetic_vit_batch(cfg, 8, DataConfig(seed=0), 0)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    losses, rbs = [], []
+    for _ in range(6):
+        state, m = step(state, teacher, batch)
+        losses.append(float(m["loss"]))
+        rbs.append(float(m["r_b"]))
+    assert losses[-1] < losses[0]
+    # cubic schedule: r_b decreasing from ~1 toward cfg r_b
+    assert rbs[0] > rbs[-1] >= cfg.pruning.r_b - 1e-6
+    # score params actually moved
+    s0 = PG.init_scores(cfg, M.init_params(cfg, rng_key),
+                        jax.random.fold_in(rng_key, 7))
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.scores), jax.tree.leaves(s0)))
+    assert moved
+
+
+def test_cubic_schedule_endpoints():
+    assert float(cubic_keep_rate(0, 100, 0.5, 10, 10)) == 1.0
+    assert float(cubic_keep_rate(95, 100, 0.5, 10, 10)) == 0.5
+    mid = float(cubic_keep_rate(50, 100, 0.5, 10, 10))
+    assert 0.5 < mid < 1.0
+
+
+def test_pruning_glue_masks_apply(rng_key):
+    cfg = DEIT_SMALL.reduced()
+    params = M.init_params(cfg, rng_key)
+    scores = PG.init_scores(cfg, params, rng_key)
+    assert len(scores) > 0
+    masked = PG.apply_pruning(cfg, params, scores, r_b=0.5)
+    w0 = np.asarray(params["layers"][0]["attn"]["wq"])
+    wm = np.asarray(masked["layers"][0]["attn"]["wq"])
+    assert (wm == 0).sum() > (w0 == 0).sum()  # actually pruned
+    # non-prunable leaves untouched
+    np.testing.assert_array_equal(np.asarray(params["cls"]),
+                                  np.asarray(masked["cls"]))
+
+
+def test_lm_pruned_train_step_runs(rng_key):
+    """Simultaneous (weight) pruning applies to LM archs too."""
+    from repro.configs import get_config
+    from repro.models import steps as ST
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = cfg.replace(pruning=cfg.pruning.__class__(block_size=16, r_b=0.5))
+    params = M.init_params(cfg, rng_key)
+    scores = PG.init_scores(cfg, params, rng_key)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(ST.make_train_step(cfg, opt, with_pruning=True))
+    opt_state = opt.init({"params": params, "scores": scores})
+    batch = {"tokens": jax.random.randint(rng_key, (2, 16), 0,
+                                          cfg.vocab_size)}
+    p2, s2, o2, metrics = step(params, opt_state, batch, scores)
+    assert np.isfinite(float(metrics["loss"]))
+    assert s2 is not None

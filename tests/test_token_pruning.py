@@ -1,0 +1,106 @@
+"""Unit tests for dynamic token pruning (paper §IV-B) + KV pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import token_pruning as tp
+
+
+def _mk(B=2, N=17, D=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (B, N, D))
+    s = jax.random.uniform(jax.random.fold_in(key, 1), (B, N))
+    return z, s
+
+
+def test_tdm_output_count():
+    z, s = _mk()
+    for rt in (0.25, 0.5, 0.9):
+        out, idx = tp.tdm(z, s, rt)
+        assert out.shape[1] == tp.num_kept_tokens(17, rt)
+
+
+def test_tdm_keeps_cls():
+    z, s = _mk()
+    out, _ = tp.tdm(z, s, 0.5)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(z[:, 0]))
+
+
+def test_tdm_keeps_top_scoring_tokens():
+    z, s = _mk(B=1)
+    out, idx = tp.tdm(z, s, 0.5)
+    body_scores = np.asarray(s[0, 1:])
+    top = set(np.argsort(-body_scores)[:8].tolist())
+    assert set(np.asarray(idx[0]).tolist()) == top
+
+
+def test_tdm_fused_token_is_weighted_average():
+    z, s = _mk(B=1, N=5, D=4)
+    out, idx = tp.tdm(z, s, 0.5)  # keeps 2 of 4 body tokens + fused
+    kept = set(np.asarray(idx[0]).tolist())
+    dropped = [i for i in range(4) if i not in kept]
+    sc = np.asarray(s[0, 1:])
+    w = sc[dropped] / sc[dropped].sum()
+    expected = (w[:, None] * np.asarray(z[0, 1:])[dropped]).sum(0)
+    np.testing.assert_allclose(np.asarray(out[0, -1]), expected, rtol=1e-5)
+
+
+def test_token_importance_from_attention():
+    # attn [B, H, Nq, Nk]: scoring row aggregated over heads
+    attn = jnp.zeros((1, 2, 3, 3)).at[0, 0, 0].set(jnp.asarray([0.1, 0.7, 0.2]))
+    attn = attn.at[0, 1, 0].set(jnp.asarray([0.3, 0.3, 0.4]))
+    s = tp.token_importance(attn, score_row=0)
+    np.testing.assert_allclose(np.asarray(s[0]), [0.2, 0.5, 0.3], rtol=1e-6)
+
+
+def test_kv_select_and_compact():
+    B, N, H, Dh = 2, 8, 2, 4
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (B, N, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, N, H, Dh))
+    mass = jnp.asarray(np.random.default_rng(0).random((B, N)))
+    idx = tp.select_kv_keep(mass, 4)
+    assert idx.shape == (B, 4)
+    # temporal order preserved
+    assert bool((jnp.diff(idx, axis=1) > 0).all())
+    k2, v2 = tp.compact_kv_cache(k, v, idx)
+    assert k2.shape == (B, 4, H, Dh)
+    np.testing.assert_allclose(
+        np.asarray(k2[0, 0]), np.asarray(k[0, int(idx[0, 0])]))
+
+
+def test_kv_prune_scores_masks_invalid():
+    mass = jnp.ones((1, 8))
+    s = tp.kv_prune_scores(mass, cache_len=5)
+    assert bool(jnp.isneginf(s[0, 5:]).all())
+    assert bool((s[0, :5] == 1.0).all())
+
+
+def test_lm_prefill_token_pruning():
+    """TDM applied to a causal LM prompt: fewer tokens after TDM layers,
+    finite last-token logits, and with r_t=1-ish behaviour approaching the
+    dense forward."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.prefill_prune import pruned_prefill_logits
+
+    key = jax.random.PRNGKey(0)
+    cfg = get_config("minitron-4b").reduced()
+    cfg = cfg.replace(pruning=cfg.pruning.__class__(
+        block_size=16, r_t=0.5, tdm_layers=(1,)))
+    params = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    logits, n_final = pruned_prefill_logits(cfg, params, toks)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert n_final < 16  # tokens actually dropped
+
+    # sanity: at high keep rate the pruned prediction tracks the dense one
+    cfg_hi = cfg.replace(pruning=cfg.pruning.__class__(
+        block_size=16, r_t=0.99, tdm_layers=(1,)))
+    hi_logits, _ = pruned_prefill_logits(cfg_hi, params, toks)
+    dense = M.forward_lm(cfg, params, toks, mode="train", remat=False)
+    a = np.asarray(hi_logits)
+    d = np.asarray(dense.logits[:, -1])
+    corr = np.corrcoef(a.ravel(), d.ravel())[0, 1]
+    assert corr > 0.98
