@@ -1,0 +1,29 @@
+"""Distribution substrate for the production runs.
+
+Three concerns, one per module:
+
+  * ``sharding`` — per-architecture PartitionSpec rules mapping every param /
+    batch / cache leaf onto the production meshes (TP on "model", DP on
+    "pod"/"data", EP for MoE expert banks).
+  * ``elastic``  — ``MeshPlan`` + ``replan``: shrink a mesh to the devices
+    actually alive, preserving tensor-parallel degree (data absorbs losses).
+  * ``fault``    — ``RestartableLoop``: checkpointed training that survives
+    injected/real step failures with bit-exact resume, plus a straggler
+    watchdog.
+"""
+from repro.dist.elastic import MeshPlan, degradation_path, replan
+from repro.dist.fault import FaultConfig, RestartableLoop, StepWatchdog
+
+# ``sharding`` is NOT imported eagerly: it pulls in jax, while elastic/fault
+# stay importable on a jax-free coordinator. ``from repro.dist import
+# sharding`` still works (submodule import).
+
+__all__ = [
+    "sharding",
+    "MeshPlan",
+    "replan",
+    "degradation_path",
+    "FaultConfig",
+    "StepWatchdog",
+    "RestartableLoop",
+]

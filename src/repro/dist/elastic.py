@@ -1,0 +1,92 @@
+"""Elastic mesh replanning: adapt a production mesh to the devices alive.
+
+A ``MeshPlan`` is the pure-data description of a mesh (shape + axis names);
+``repro.launch.mesh.make_mesh(plan.shape, plan.axes)`` realizes it. Keeping
+this module jax-free means replanning logic can run on a coordinator that
+never initializes a backend.
+
+Policy: tensor parallelism is the expensive axis to change (weights must be
+re-sharded and collectives re-tuned), so ``replan`` preserves the "model"
+axis degree whenever it divides the surviving device count and shrinks the
+data-parallel axes instead — a pod loss degrades throughput, not the model
+partitioning. ``degradation_path`` precomputes the ladder of plans a run
+walks down as capacity drops (e.g. ``(2,16,16) -> (16,16) -> (8,16)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+# Axes that carry data parallelism, outermost first. Extra axes (e.g. "pod")
+# are collapsed into "data" when a replan shrinks the mesh.
+DATA_AXES: Tuple[str, ...] = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Pure-data mesh description: ``shape[i]`` devices along ``axes[i]``."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+        if any(s < 1 for s in self.shape):
+            raise ValueError(f"axis sizes must be >= 1: {self.shape}")
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.shape)
+
+    def axis_size(self, name: str, default: int = 1) -> int:
+        return self.shape[self.axes.index(name)] if name in self.axes else default
+
+    @property
+    def data_degree(self) -> int:
+        return math.prod(self.axis_size(a) for a in DATA_AXES)
+
+    def describe(self) -> str:
+        return "x".join(str(s) for s in self.shape) + f" ({','.join(self.axes)})"
+
+
+def replan(devices: int, plan: MeshPlan) -> MeshPlan:
+    """Best plan for ``devices`` available devices.
+
+    Keeps ``plan`` unchanged when capacity suffices. Otherwise preserves the
+    tensor-parallel ("model") degree if it divides ``devices`` — falling
+    back to ``gcd(devices, tp)`` so the degraded degree still divides every
+    weight dim the original degree did — folds any extra data axes ("pod")
+    into a single "data" axis, and shrinks that axis to fit, never growing
+    it beyond the original total data-parallel degree.
+    """
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if devices >= plan.num_devices:
+        return plan
+
+    tp = math.gcd(devices, plan.axis_size(MODEL_AXIS))
+    dp = min(devices // tp, max(plan.data_degree, 1))
+
+    shape: List[int] = []
+    axes: List[str] = []
+    if any(a in plan.axes for a in DATA_AXES) or MODEL_AXIS not in plan.axes:
+        shape.append(dp)
+        axes.append("data")
+    if MODEL_AXIS in plan.axes:
+        shape.append(tp)
+        axes.append(MODEL_AXIS)
+    return MeshPlan(tuple(shape), tuple(axes))
+
+
+def degradation_path(plan: MeshPlan,
+                     device_budgets: Sequence[int]) -> List[MeshPlan]:
+    """The ladder of plans a run walks as capacity drops.
+
+    Returns ``[plan] + [replan(b, plan) for b in device_budgets]`` — index 0
+    is the healthy mesh, later entries the degraded fallbacks. Budgets are
+    expected (not required) to be decreasing.
+    """
+    return [plan] + [replan(b, plan) for b in device_budgets]

@@ -1,0 +1,215 @@
+"""PartitionSpec rules for every architecture family in ``configs/archs.py``.
+
+The single entry point is ``param_spec(cfg, path, ndim, shape)``: given a
+"/"-joined pytree path (as produced by ``_path_str``) it returns the
+PartitionSpec for that leaf on the production mesh axes:
+
+  * column-parallel (shard the OUTPUT dim on "model"): ``wq``/``wk``/``wv``/
+    ``wqkv``, MLP ``wg``/``wi``, RWKV time-mix projections, Mamba ``in_proj``,
+    the ViT ``patch_embed``;
+  * row-parallel (shard the INPUT dim on "model"): attention/MLP ``wo``,
+    RWKV channel-mix ``cm_wv``, Mamba ``out_proj`` — the matmul partner of a
+    column-parallel layer, so activations stay sharded between the two;
+  * expert-parallel MoE banks: the expert axis on "model" (EP == TP degree),
+    with routers replicated so every shard routes identically;
+  * embeddings vocab-sharded on "model"; ``unembed``/``head`` output-sharded;
+  * norms / biases / scalars replicated.
+
+Specs are structural intents: ``_validate`` drops any spec entry whose mesh
+axis does not divide the dim (or is absent from the mesh), so the same rules
+serve the 16x16 production mesh and tiny test meshes. Tree-level builders
+(``params_shardings`` / ``batch_shardings`` / ``cache_shardings`` /
+``replicated``) wrap the rules into NamedSharding pytrees for the dry-run
+and the launchers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.elastic import DATA_AXES
+
+# Weight names sharded on the output (last) dim — "column parallel".
+_COLUMN = frozenset({
+    "wq", "wk", "wv", "wqkv",         # attention input projections
+    "wg", "wi",                        # (GLU-)MLP up projections
+    "wr", "ww", "cm_wk",               # RWKV time-mix / channel-mix up
+    "in_proj",                         # Mamba2 fused input projection
+    "patch_embed",                     # ViT patchifier
+})
+# Weight names sharded on the input (second-to-last) dim — "row parallel".
+_ROW = frozenset({"wo", "cm_wv", "out_proj"})
+# Output heads sharded over the class/vocab (last) dim.
+_VOCAB_OUT = frozenset({"unembed", "head"})
+
+
+# ---------------------------------------------------------------------------
+# Path utilities
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    """jax keypath -> "layers/attn/wq"-style string (dict keys, sequence
+    indices, and namedtuple field names all flatten to plain segments)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf rules
+# ---------------------------------------------------------------------------
+def param_spec(cfg: ModelConfig, path: str, ndim: int,
+               shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one parameter leaf (before mesh validation)."""
+    parts = path.split("/")
+    name = parts[-1]
+    none = [None] * ndim
+    if ndim == 0:
+        return P()
+
+    # MoE: expert banks are stacked [layers?, experts, d_in, d_out] — shard
+    # the expert axis (EP over the TP mesh axis); shared-expert MLPs fall
+    # through to the dense column/row rules; routers stay replicated so all
+    # shards compute identical routing decisions.
+    if "moe" in parts and "shared" not in parts:
+        if name == "router":
+            return P(*none)
+        if name in ("wg", "wi", "wo") and ndim >= 3:
+            spec = list(none)
+            spec[ndim - 3] = "model"
+            return P(*spec)
+
+    if name == "embed":
+        return P("model", *none[1:])  # vocab-sharded; d_model replicated
+    if name in _VOCAB_OUT:
+        spec = list(none)
+        spec[-1] = "model"
+        return P(*spec)
+
+    # RWKV time-mix wk/wv sharding is a perf lever that changes the WKV
+    # state layout; keep them replicated unless the config opts in.
+    if cfg.family == "ssm" and name in ("wk", "wv") and not cfg.shard_rwkv_kv:
+        return P(*none)
+
+    if name in _COLUMN and ndim >= 2:
+        spec = list(none)
+        spec[-1] = "model"
+        return P(*spec)
+    if name in _ROW and ndim >= 2:
+        spec = list(none)
+        spec[-2] = "model"
+        return P(*spec)
+
+    # norms, biases, gates, positional tables, recurrent mixing vectors, ...
+    return P(*none)
+
+
+def _validate(spec: P, shape: Tuple[int, ...], mesh, path: str) -> P:
+    """Drop spec entries whose mesh axes don't divide the dim (or don't
+    exist on this mesh). Leaves the spec length == len(shape)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in mesh.shape for a in names):
+            out.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        out.append(ax if size >= 1 and dim % size == 0 else None)
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level builders (NamedSharding pytrees for jit in_shardings)
+# ---------------------------------------------------------------------------
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _data_axes(mesh) -> Optional[Any]:
+    """The mesh axes that carry the batch dim ("pod"+"data" merged)."""
+    axes = tuple(a for a in DATA_AXES if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def params_shardings(cfg: ModelConfig, mesh, spec_tree: Any) -> Any:
+    """NamedSharding per leaf of a param (or optimizer-moment) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec_tree)
+    shs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        spec = param_spec(cfg, ps, leaf.ndim, leaf.shape)
+        shs.append(NamedSharding(mesh, _validate(spec, leaf.shape, mesh, ps)))
+    return jax.tree_util.tree_unflatten(treedef, shs)
+
+
+def batch_shardings(mesh, spec_tree: Any) -> Any:
+    """Shard the leading (batch) dim of every input leaf over the data axes;
+    tiny batches that don't divide fall back to replicated via _validate."""
+    dax = _data_axes(mesh)
+
+    def one(leaf):
+        if dax is None or leaf.ndim == 0:
+            return replicated(mesh)
+        spec = P(dax, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, _validate(spec, leaf.shape, mesh, "batch"))
+
+    return jax.tree.map(one, spec_tree)
+
+
+# Cache-leaf rules keyed by field name: (batch_offset, model_offset), both
+# counted FROM THE END of the shape so any number of leading layer/stage
+# stacking axes is tolerated. batch -> data axes, heads/channels -> "model".
+_CACHE_RULES = {
+    "k": (4, 2),          # [..., B, S, KV, Dh]
+    "v": (4, 2),
+    "attn_mass": (2, None),   # [..., B, S]
+    "wkv": (4, 3),        # RWKV state [..., B, H, Dh, Dh]
+    "h": (4, 3),          # Mamba state [..., B, H, Dh, State]
+    "conv": (3, 1),       # Mamba conv buffer [..., B, W-1, Inner]
+    "shift_tm": (2, None),    # RWKV token-shift [..., B, D]
+    "shift_cm": (2, None),
+}
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_spec: Any) -> Any:
+    """Shardings for serve-state trees (KV caches / recurrent states).
+
+    Batch dims go on the data axes, head/channel dims on "model"; scalars
+    (cache lengths) and unrecognized leaves replicate."""
+    dax = _data_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_spec)
+    shs = []
+    for path, leaf in flat:
+        name = _path_str(path).split("/")[-1]
+        rule = _CACHE_RULES.get(name)
+        if rule is None or leaf.ndim < rule[0]:
+            shs.append(replicated(mesh))
+            continue
+        b_off, m_off = rule
+        spec = [None] * leaf.ndim
+        if dax is not None:
+            spec[leaf.ndim - b_off] = dax
+        if m_off is not None:
+            spec[leaf.ndim - m_off] = "model"
+        shs.append(NamedSharding(
+            mesh, _validate(P(*spec), leaf.shape, mesh, name)))
+    return jax.tree_util.tree_unflatten(treedef, shs)

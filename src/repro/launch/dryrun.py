@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES_BY_NAME, get_config, grid_cells
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import elastic as ELASTIC
 from repro.dist import sharding as SH
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh, make_mesh
@@ -174,7 +175,10 @@ def _probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
         with mesh:
             compiled = jax.jit(fn, in_shardings=shardings).lower(
                 *specs).compile()
-        cost = dict(compiled.cost_analysis() or {})
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
+        cost = dict(cost)
         coll = RL.parse_collectives(compiled.as_text(),
                                     default_trip_count=1)
         pts.append({
@@ -193,9 +197,11 @@ def _probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
         return a + b * U
 
     coll_by_kind = {}
-    for kind in p1["coll_by_kind"]:
-        b = p2["coll_by_kind"][kind] - p1["coll_by_kind"][kind]
-        a = p1["coll_by_kind"][kind] - b
+    for kind in set(p1["coll_by_kind"]) | set(p2["coll_by_kind"]):
+        c1 = p1["coll_by_kind"].get(kind, 0.0)
+        c2 = p2["coll_by_kind"].get(kind, 0.0)
+        b = c2 - c1
+        a = c1 - b
         coll_by_kind[kind] = max(0.0, a + b * U)
     return {
         "flops": max(0.0, extrap("flops")),
@@ -280,9 +286,14 @@ def main() -> int:
     if args.mesh in ("multi", "both"):
         meshes.append(("multi_pod_2x16x16",
                        lambda: make_production_mesh(multi_pod=True)))
-    if args.mesh == "tiny":  # test path: REPRO_DRYRUN_DEVICES=8
-        meshes.append(("tiny_2x2x2", lambda: make_mesh((2, 2, 2),
-                                                       ("pod", "data", "model"))))
+    if args.mesh == "tiny":  # test path: REPRO_DRYRUN_DEVICES=4..8
+        # elastic: shrink the reference 2x2x2 plan to the forced device
+        # count (data axes absorb the loss, TP degree is preserved)
+        plan = ELASTIC.replan(
+            jax.device_count(),
+            ELASTIC.MeshPlan((2, 2, 2), ("pod", "data", "model")))
+        name = "tiny_" + "x".join(str(s) for s in plan.shape)
+        meshes.append((name, lambda: make_mesh(plan.shape, plan.axes)))
 
     cells = grid_cells(args.arch)
     if args.shape:

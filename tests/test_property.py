@@ -4,7 +4,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import block_pruning as bp
 from repro.core import packing

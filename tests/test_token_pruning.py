@@ -45,6 +45,44 @@ def test_tdm_fused_token_is_weighted_average():
     np.testing.assert_allclose(np.asarray(out[0, -1]), expected, rtol=1e-5)
 
 
+def test_tdm_rt_one_keeps_everything_plus_fused_slot():
+    """r_t=1.0: no token is dropped, but the fused slot is still appended
+    (static shape contract) and aggregates nothing (zero vector)."""
+    z, s = _mk(B=2, N=9, D=4)
+    out, idx = tp.tdm(z, s, 1.0)
+    assert out.shape[1] == tp.num_kept_tokens(9, 1.0) == 9 + 1
+    for b in range(2):
+        assert sorted(np.asarray(idx[b]).tolist()) == list(range(8))
+    np.testing.assert_allclose(np.asarray(out[:, -1]), 0.0, atol=1e-6)
+
+
+def test_tdm_without_cls():
+    """has_cls=False: no protected slot; output is top-k body + fused."""
+    z, s = _mk(B=1, N=8)
+    out, idx = tp.tdm(z, s, 0.5, has_cls=False)
+    assert out.shape[1] == tp.num_kept_tokens(8, 0.5, has_cls=False) == 5
+    top = set(np.argsort(-np.asarray(s[0]))[:4].tolist())
+    assert set(np.asarray(idx[0]).tolist()) == top
+    # first output slot is the best-scoring token, not a CLS passthrough
+    best = int(np.argmax(np.asarray(s[0])))
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(z[0, best]))
+
+
+def test_compact_kv_cache_preserves_temporal_order():
+    """select_kv_keep sorts indices, so the compacted cache must read out
+    in the original temporal order (RoPE sanity)."""
+    B, N, H, Dh = 3, 16, 2, 4
+    # encode each slot's position into its values
+    pos = jnp.broadcast_to(jnp.arange(N, dtype=jnp.float32)[None, :, None, None],
+                           (B, N, H, Dh))
+    mass = jnp.asarray(np.random.default_rng(3).random((B, N)))
+    idx = tp.select_kv_keep(mass, 6)
+    k2, v2 = tp.compact_kv_cache(pos, pos, idx)
+    kept_pos = np.asarray(k2[:, :, 0, 0])
+    assert (np.diff(kept_pos, axis=1) > 0).all()
+    np.testing.assert_array_equal(kept_pos, np.asarray(idx, np.float32))
+
+
 def test_token_importance_from_attention():
     # attn [B, H, Nq, Nk]: scoring row aggregated over heads
     attn = jnp.zeros((1, 2, 3, 3)).at[0, 0, 0].set(jnp.asarray([0.1, 0.7, 0.2]))
