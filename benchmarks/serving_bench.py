@@ -1,0 +1,118 @@
+"""Static-wave vs continuous-batching serving throughput.
+
+A static wave holds every slot until the *longest* request in the wave
+finishes, so skewed request lengths strand capacity; the continuous path
+re-admits waiting requests into slots the moment one retires. This bench
+serves an identical skewed request mix through both paths and reports
+tokens/s — the continuous speedup is the scheduling win, independent of
+the per-step kernel costs.
+
+Caveat at reference scale: every admission re-prefills the batch at a new
+prefix length, which jit-recompiles — on a CPU-reduced model that compile
+cost dominates and continuous can *lose*. The ROADMAP open item (per-slot
+prefill writes + prefix-length bucketing) removes exactly this overhead;
+the bench exists to make the crossover measurable.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py            # full
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI lane
+
+``--smoke`` runs a seconds-scale configuration and exits non-zero if either
+path fails to serve every request (the CI fast lane runs it so serving-path
+regressions fail visibly).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def make_requests(cfg, num: int, prompt_lo: int, prompt_hi: int,
+                  new_lo: int, new_hi: int, seed: int):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(num):
+        plen = int(rng.integers(prompt_lo, prompt_hi + 1))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
+            max_new_tokens=int(rng.integers(new_lo, new_hi + 1))))
+    return reqs
+
+
+def bench(arch: str, num: int, slots: int, prompt_lo: int, prompt_hi: int,
+          new_lo: int, new_hi: int, kv_prune: float, seed: int):
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving import EngineConfig, ServeEngine
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ec = EngineConfig(
+        max_batch=slots,
+        # continuous re-prefill pads a finished-prefix slot (prompt + up to
+        # new_hi generated) against a slot with up to new_hi still to go,
+        # so the cache high-water mark is prompt_hi + 2*new_hi - 1
+        max_len=prompt_hi + 2 * new_hi + 8,
+        kv_prune_interval=4 if kv_prune < 1.0 else 0,
+        kv_prune_keep=kv_prune)
+
+    results = {}
+    for mode in ("static", "continuous"):
+        engine = ServeEngine(cfg, params, ec)
+        reqs = make_requests(cfg, num, prompt_lo, prompt_hi,
+                             new_lo, new_hi, seed)
+        run = engine.run if mode == "static" else engine.run_continuous
+        run(make_requests(cfg, min(num, slots), prompt_lo, prompt_hi,
+                          new_lo, new_lo, seed + 1))  # warmup/compile
+        t0 = time.time()
+        out = run(reqs)
+        dt = time.time() - t0
+        tokens = sum(len(v) for v in out.values())
+        results[mode] = {"seconds": dt, "tokens": tokens,
+                         "tok_s": tokens / dt, "served": len(out),
+                         "expected": num}
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-lo", type=int, default=8)
+    ap.add_argument("--prompt-hi", type=int, default=24)
+    ap.add_argument("--new-lo", type=int, default=4)
+    ap.add_argument("--new-hi", type=int, default=24)
+    ap.add_argument("--kv-prune", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for the CI fast lane")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.slots = 6, 2
+        args.prompt_lo, args.prompt_hi = 4, 8
+        args.new_lo, args.new_hi = 2, 8
+
+    res = bench(args.arch, args.requests, args.slots, args.prompt_lo,
+                args.prompt_hi, args.new_lo, args.new_hi, args.kv_prune,
+                args.seed)
+    ok = True
+    for mode, r in res.items():
+        served = f"{r['served']}/{r['expected']}"
+        print(f"{mode:10s}: {r['tokens']:5d} tokens in {r['seconds']:6.2f}s "
+              f"({r['tok_s']:7.1f} tok/s, served {served})")
+        ok &= r["served"] == r["expected"]
+    speedup = res["continuous"]["tok_s"] / res["static"]["tok_s"]
+    print(f"continuous vs static: {speedup:.2f}x")
+    if not ok:
+        print("FAIL: not every request was served", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

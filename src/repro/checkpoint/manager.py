@@ -103,6 +103,9 @@ class CheckpointManager:
         for (path, leaf), sh in zip(flat, shard_flat):
             key = "/".join(_part(p) for p in path)
             arr = np.load(os.path.join(d, key.replace("/", "__") + ".npy"))
+            dt = getattr(leaf, "dtype", None)
+            if dt is not None and arr.dtype != dt:
+                arr = arr.astype(dt)  # sharded path must cast too
             if sh is not None:
                 leaves.append(jax.device_put(arr, sh))
             else:

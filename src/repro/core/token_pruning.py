@@ -90,18 +90,39 @@ def tdm_reference_unbatched(z: jnp.ndarray, scores: jnp.ndarray, r_t: float,
 # Beyond-paper: dynamic KV-cache pruning for decode (SpAtten-style adaptation
 # of the paper's token scoring to autoregressive serving).
 # ---------------------------------------------------------------------------
-def kv_prune_scores(accum_attn: jax.Array, cache_len: int) -> jax.Array:
+def kv_prune_scores(accum_attn: jax.Array, cache_len,
+                    start=None) -> jax.Array:
     """``accum_attn [B, N_cache]`` is attention mass accumulated over decode
-    steps and heads. Returns the same scores, masked to the valid cache."""
+    steps and heads. Returns the same scores, masked to the valid cache
+    window ``[start, cache_len)`` — ``start`` (scalar or per-slot ``[B]``)
+    masks left-padding so pad slots never compete with real tokens."""
     n = accum_attn.shape[-1]
     pos = jnp.arange(n)
-    return jnp.where(pos < cache_len, accum_attn, -jnp.inf)
+    valid = pos < cache_len
+    if start is not None:
+        valid = valid & (pos >= jnp.asarray(start)[..., None])
+    return jnp.where(valid, accum_attn, -jnp.inf)
 
 
-def select_kv_keep(accum_attn: jax.Array, keep: int) -> jax.Array:
-    """Indices of the ``keep`` highest-mass cached tokens. ``keep`` static."""
-    _, idx = jax.lax.top_k(accum_attn, keep)
-    return jnp.sort(idx, axis=-1)  # preserve temporal order for RoPE sanity
+def select_kv_keep(accum_attn: jax.Array, keep: int,
+                   invalid_first: bool = False) -> jax.Array:
+    """Indices of the ``keep`` highest-mass cached tokens. ``keep`` static.
+
+    ``keep`` is clamped to the score width, and picks whose score is ``-inf``
+    (slots masked out by ``kv_prune_scores``) are grouped away from the valid
+    picks instead of interleaving with them: valid indices stay in temporal
+    order (RoPE sanity) and invalid ones are packed at the back — or at the
+    front with ``invalid_first=True``, which lets a caller express the
+    resulting garbage prefix as a per-slot ``start`` offset."""
+    n = accum_attn.shape[-1]
+    keep = max(1, min(keep, n))
+    vals, idx = jax.lax.top_k(accum_attn, keep)
+    invalid = jnp.isneginf(vals)
+    if invalid_first:
+        key = jnp.where(invalid, idx, idx + n)
+    else:
+        key = jnp.where(invalid, idx + n, idx)
+    return jnp.sort(key, axis=-1) % n
 
 
 def compact_kv_cache(k_cache: jax.Array, v_cache: jax.Array,

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 # Axes that carry data parallelism, outermost first. Extra axes (e.g. "pod")
 # are collapsed into "data" when a replan shrinks the mesh.
@@ -90,3 +90,14 @@ def degradation_path(plan: MeshPlan,
     expected (not required) to be decreasing.
     """
     return [plan] + [replan(b, plan) for b in device_budgets]
+
+
+def first_fit(plans: Sequence[MeshPlan], devices: int) -> Optional[MeshPlan]:
+    """Walk a degradation ladder and return the first plan that fits the
+    surviving device count (ladder order == preference order — the serving
+    engine calls this on device loss to pick its degraded mesh). ``None``
+    when even the smallest plan needs more devices than remain."""
+    for p in plans:
+        if p.num_devices <= devices:
+            return p
+    return None

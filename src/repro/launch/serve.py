@@ -3,12 +3,20 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \\
         --requests 8 --max-new 16 --kv-prune 0.5
 
+``--continuous`` serves through the slot-based continuous-batching path;
+``--elastic-drop N`` additionally simulates losing half the devices after
+``N`` engine steps, exercising the degradation_path replan + re-shard
+(meaningful with >1 device, e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+
 Demonstrates the beyond-paper dynamic KV-cache pruning (the paper's token
 scoring adapted to decode) on a runnable reduced model.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import tempfile
 import time
 
 import jax
@@ -16,34 +24,67 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving import EngineConfig, Request, ServeEngine
+from repro.serving import ElasticContext, EngineConfig, Request, ServeEngine
+
+
+def simulated_loss_context(params, drop_after: int,
+                           directory: str) -> ElasticContext:
+    """ElasticContext that reports full capacity for ``drop_after`` probes,
+    then half the devices forever after (the checkpoint holding ``params``
+    is written into ``directory``)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.dist.elastic import MeshPlan
+
+    ndev = jax.device_count()
+    manager = CheckpointManager(directory, keep=1)
+    manager.save(0, params)
+    degraded = max(ndev // 2, 1)
+    probes = {"n": 0}
+
+    def device_count() -> int:
+        probes["n"] += 1
+        return ndev if probes["n"] <= drop_after else degraded
+
+    return ElasticContext(
+        manager=manager,
+        plan=MeshPlan((ndev, 1), ("data", "model")),
+        budgets=[degraded, 1],
+        device_count=device_count)
 
 
 def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
           max_new: int = 16, kv_prune: float = 1.0, reduced: bool = True,
-          max_batch: int = 4, seed: int = 0):
+          max_batch: int = 4, seed: int = 0, continuous: bool = False,
+          elastic_drop: int = 0):
+    if elastic_drop and not continuous:
+        raise ValueError("--elastic-drop requires --continuous: only the "
+                         "slot path probes device_count() between steps")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     ec = EngineConfig(
         max_batch=max_batch,
-        max_len=prompt_len + max_new + 8,
+        max_len=prompt_len + 2 * max_new + 8,
         kv_prune_interval=4 if kv_prune < 1.0 else 0,
         kv_prune_keep=kv_prune)
-    engine = ServeEngine(cfg, params, ec)
     rng = np.random.default_rng(seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, prompt_len,
                                         dtype=np.int32),
                     max_new_tokens=max_new)
             for i in range(num_requests)]
-    t0 = time.time()
-    out = engine.run(reqs)
-    dt = time.time() - t0
+    with tempfile.TemporaryDirectory(prefix="elastic_") as ckpt_dir:
+        elastic = (simulated_loss_context(params, elastic_drop, ckpt_dir)
+                   if elastic_drop else None)
+        engine = ServeEngine(cfg, params, ec, elastic=elastic)
+        t0 = time.time()
+        out = engine.run_continuous(reqs) if continuous else engine.run(reqs)
+        dt = time.time() - t0
     total_tokens = sum(len(v) for v in out.values())
     return {"outputs": out, "seconds": dt,
-            "tokens_per_s": total_tokens / dt}
+            "tokens_per_s": total_tokens / dt,
+            "events": list(engine.events)}
 
 
 def main():
@@ -53,14 +94,31 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--kv-prune", type=float, default=1.0)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the slot-based continuous path")
+    ap.add_argument("--elastic-drop", type=int, default=0, metavar="N",
+                    help="simulate losing half the devices after N steps")
+    ap.add_argument("--json", action="store_true",
+                    help="print a machine-readable result line")
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.prompt_len, args.max_new,
-                args.kv_prune, args.reduced)
+                args.kv_prune, args.reduced, max_batch=args.max_batch,
+                continuous=args.continuous, elastic_drop=args.elastic_drop)
+    if args.json:
+        print(json.dumps({
+            "outputs": {str(k): v for k, v in out["outputs"].items()},
+            "tokens_per_s": out["tokens_per_s"],
+            "events": out["events"]}))
+        return
     print(f"served {args.requests} requests in {out['seconds']:.2f}s "
           f"({out['tokens_per_s']:.1f} tok/s)")
     for uid, toks in sorted(out["outputs"].items()):
         print(f"  req {uid}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
+    for ev in out["events"]:
+        if ev[0] == "degrade":
+            print(f"  degraded to mesh {ev[1]}")
 
 
 if __name__ == "__main__":

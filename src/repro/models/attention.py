@@ -82,13 +82,16 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         q_offset: int | jax.Array = 0,
                         kv_len: Optional[jax.Array] = None,
+                        kv_start: Optional[jax.Array] = None,
                         q_chunk: int = 512, k_chunk: int = 512,
                         scale: Optional[float] = None) -> jax.Array:
     """Grouped-query chunked attention.
 
     q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]; Hq = G·KV groups.
     ``q_offset`` is the absolute position of q[0] (decode). ``kv_len`` masks
-    cache slots >= kv_len. Returns [B, Nq, Hq, Dh] in q.dtype.
+    cache slots >= kv_len; ``kv_start`` ([B] int32) masks slots < kv_start
+    per batch row (left-padded prompts / compacted-cache garbage prefixes).
+    Returns [B, Nq, Hq, Dh] in q.dtype.
     """
     B, Nq, Hq, Dh = q.shape
     _, Nk, KV, _ = k.shape
@@ -139,6 +142,11 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if kv_len is not None:
                 mask &= (k_pos < kv_len)[None, :]
+            if kv_start is not None:
+                # per-batch mask: [qc, kc] -> [B, 1(g), 1(h), qc, kc]
+                row = k_pos[None, :] >= kv_start[:, None]  # [B, kc]
+                mask = mask[None] & row[:, None, :]
+                mask = mask[:, None, None]
             s = jnp.einsum("bghqd,bgkd->bghqk", qc_data.astype(jnp.float32),
                            kc_data.astype(jnp.float32)) * scale
             s = jnp.where(mask, s, NEG_INF)
@@ -178,12 +186,15 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def attention_probs_row(q_row: jax.Array, k: jax.Array,
                         kv_len: Optional[jax.Array] = None,
+                        kv_start: Optional[jax.Array] = None,
                         scale: Optional[float] = None) -> jax.Array:
     """Softmax attention of ONE query row against all keys, per head —
     exactly what the TDM scoring needs (CLS row for ViT, last row for LM
     prefill) without materializing the full ``A`` matrix.
 
-    q_row: [B, Hq, Dh]; k: [B, Nk, KV, Dh]. Returns probs [B, Hq, Nk].
+    q_row: [B, Hq, Dh]; k: [B, Nk, KV, Dh]. ``kv_start`` ([B]) masks cache
+    slots < kv_start per batch row so left-padding accumulates zero
+    attention mass. Returns probs [B, Hq, Nk].
     """
     B, Nk, KV, Dh = k.shape
     Hq = q_row.shape[1]
@@ -192,9 +203,12 @@ def attention_probs_row(q_row: jax.Array, k: jax.Array,
         scale = Dh ** -0.5
     qg = q_row.reshape(B, KV, per, Dh).astype(jnp.float32)
     s = jnp.einsum("bgpd,bkgd->bgpk", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(Nk)
     if kv_len is not None:
-        pos = jnp.arange(Nk)
         s = jnp.where((pos < kv_len)[None, None, None, :], s, NEG_INF)
+    if kv_start is not None:
+        row = pos[None, :] >= kv_start[:, None]  # [B, Nk]
+        s = jnp.where(row[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return p.reshape(B, Hq, Nk)
 
@@ -209,6 +223,7 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
                     score_row: int = 0,
                     use_rope: bool = True,
                     kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    valid_start: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[KVCache], Optional[jax.Array]]:
     """One attention sublayer. Returns (out, new_cache, tdm_scores).
 
@@ -216,6 +231,10 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
     * decode: x is [B, 1, D]; cache holds the past.
     * cross-attention: pass ``kv_override=(k, v)`` (already projected
       encoder keys/values) — used by whisper decoder + VLM image layers.
+    * ``valid_start`` ([B] int32): first real position per batch row —
+      earlier slots (left-padded prompts, compacted-cache garbage prefixes)
+      are masked out of the attention and of the ``attn_mass`` accumulation
+      that drives dynamic KV pruning.
     """
     B, N, D = x.shape
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -259,18 +278,20 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
         new_len = cache.length + N
         out = flash_attention_jnp(
             q, k_all, v_all, causal=causal, q_offset=cache.length,
-            kv_len=new_len,
+            kv_len=new_len, kv_start=valid_start,
             q_chunk=min(512, N), k_chunk=min(512, k_all.shape[1]))
         # accumulate attention mass for dynamic KV pruning (decode only)
         mass = cache.attn_mass
         if N == 1:
-            probs = attention_probs_row(q[:, 0], k_all, kv_len=new_len)
+            probs = attention_probs_row(q[:, 0], k_all, kv_len=new_len,
+                                        kv_start=valid_start)
             mass = mass + probs.mean(axis=1)
         new_cache = KVCache(k_all, v_all, new_len, mass)
     else:
         kv_len = None
         out = flash_attention_jnp(
             q, k, v, causal=causal and kv_override is None,
+            kv_start=valid_start if kv_override is None else None,
             q_chunk=min(512, N), k_chunk=min(512, k.shape[1]))
 
     if collect_scores:

@@ -212,20 +212,21 @@ def _init_vit(cfg: ModelConfig, key, dtype) -> Dict:
 # ===========================================================================
 # Forward passes
 # ===========================================================================
-def _self_layer_fwd(x, lp, cfg, *, causal=True, cache=None, glu=True):
+def _self_layer_fwd(x, lp, cfg, *, causal=True, cache=None, glu=True,
+                    valid_start=None):
     h, new_cache, _ = A.attention_block(
         L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
-        causal=causal, cache=cache)
+        causal=causal, cache=cache, valid_start=valid_start)
     x = x + h
     mlp = L.glu_mlp if glu else L.gelu_mlp
     x = x + mlp(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
     return x, new_cache
 
 
-def _moe_layer_fwd(x, lp, cfg, cache=None):
+def _moe_layer_fwd(x, lp, cfg, cache=None, valid_start=None):
     h, new_cache, _ = A.attention_block(
         L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
-        causal=True, cache=cache)
+        causal=True, cache=cache, valid_start=valid_start)
     x = x + h
     y, aux = MOE.moe_ffn(L.rms_norm(x, lp["ln2"], cfg.norm_eps), lp["moe"], cfg)
     return x + y, new_cache, aux
@@ -286,18 +287,24 @@ def forward_lm(cfg: ModelConfig, params: Dict, tokens: jax.Array,
                vision_embeds: Optional[jax.Array] = None,
                audio_frames: Optional[jax.Array] = None,
                remat: bool = True, logits_for: str = "all",
-               unroll: bool = False) -> Output:
+               unroll: bool = False,
+               valid_start: Optional[jax.Array] = None) -> Output:
     """Language-model forward for all non-ViT families.
 
     ``logits_for``: "all" materializes [B, N, V] logits; "last" computes
     only the final position (prefill path — avoids a [B, S, V] tensor);
     "none" returns hidden states only (the chunked-loss training path).
     ``unroll``: replace layer/attention scans with Python loops so the HLO
-    is while-free (the dry-run's exact cost probes)."""
+    is while-free (the dry-run's exact cost probes).
+    ``valid_start`` ([B] int32): per-row index of the first real token —
+    earlier (left-padded) positions are masked out of every self-attention
+    and out of the KV attn_mass accumulation. Only attention-backed
+    families honor it; recurrent state (ssm/hybrid mamba) cannot mask
+    already-absorbed pad tokens, so serve those families unpadded."""
     with A.unroll_mode(unroll):
         return _forward_lm_impl(cfg, params, tokens, mode, caches,
                                 vision_embeds, audio_frames, remat,
-                                logits_for, unroll)
+                                logits_for, unroll, valid_start)
 
 
 def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
@@ -305,7 +312,8 @@ def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
                      vision_embeds: Optional[jax.Array],
                      audio_frames: Optional[jax.Array],
                      remat: bool, logits_for: str,
-                     unroll: bool) -> Output:
+                     unroll: bool,
+                     valid_start: Optional[jax.Array] = None) -> Output:
     fam = cfg.family
     adt = jnp.dtype(cfg.dtype)
     scan = _unrolled_scan if unroll else jax.lax.scan
@@ -320,10 +328,12 @@ def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
             lp, cache = xs
             cache = _as_cache(cache)
             if fam == "dense":
-                x, nc = _self_layer_fwd(x, lp, cfg, causal=True, cache=cache)
+                x, nc = _self_layer_fwd(x, lp, cfg, causal=True, cache=cache,
+                                        valid_start=valid_start)
                 return x, (nc if nc is not None else jnp.zeros((0,)),
                            jnp.float32(0.0))
-            x, nc, aux = _moe_layer_fwd(x, lp, cfg, cache=cache)
+            x, nc, aux = _moe_layer_fwd(x, lp, cfg, cache=cache,
+                                        valid_start=valid_start)
             return x, (nc if nc is not None else jnp.zeros((0,)), aux)
 
         if mode == "train":
@@ -347,7 +357,8 @@ def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
             def inner(c2, xs2):
                 lp, lc = xs2
                 lc = _as_cache(lc)
-                y, nc = _self_layer_fwd(c2, lp, cfg, causal=True, cache=lc)
+                y, nc = _self_layer_fwd(c2, lp, cfg, causal=True, cache=lc,
+                                        valid_start=valid_start)
                 return y, nc if nc is not None else jnp.zeros((0,))
             x, ncs = scan(inner, x, (sp["self"], cache))
             x = _cross_layer_fwd(x, sp["cross"], cfg, vis)
@@ -392,7 +403,7 @@ def _forward_lm_impl(cfg: ModelConfig, params: Dict, tokens: jax.Array,
             cache = _as_cache(cache)
             h, nc, _ = A.attention_block(
                 L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
-                causal=True, cache=cache)
+                causal=True, cache=cache, valid_start=valid_start)
             x = x + h
             k = L.linear(enc, lp["xattn"]["wk"]).reshape(B, Nf, KV, Dh)
             v = L.linear(enc, lp["xattn"]["wv"]).reshape(B, Nf, KV, Dh)

@@ -177,12 +177,15 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[AdamW] = None,
 # Serve steps
 # ===========================================================================
 def make_prefill(cfg: ModelConfig, unroll: bool = False):
+    """``batch`` may carry "valid_start" ([B] int32): first real token per
+    row — left-padded prompt positions are masked out of attention."""
     def prefill(params, batch, caches):
         out = M.forward_lm(cfg, params, batch["tokens"], mode="prefill",
                            caches=caches,
                            vision_embeds=batch.get("vision_embeds"),
                            audio_frames=batch.get("audio_frames"),
-                           logits_for="last", unroll=unroll)
+                           logits_for="last", unroll=unroll,
+                           valid_start=batch.get("valid_start"))
         next_tok = jnp.argmax(out.logits[:, -1], axis=-1)
         return next_tok, out.caches
     return prefill
@@ -190,9 +193,10 @@ def make_prefill(cfg: ModelConfig, unroll: bool = False):
 
 def make_decode_step(cfg: ModelConfig, unroll: bool = False):
     """One token in, one token out, caches updated in place."""
-    def decode(params, token, caches, vision_embeds=None):
+    def decode(params, token, caches, vision_embeds=None, valid_start=None):
         out = M.forward_lm(cfg, params, token, mode="decode", caches=caches,
-                           vision_embeds=vision_embeds, unroll=unroll)
+                           vision_embeds=vision_embeds, unroll=unroll,
+                           valid_start=valid_start)
         next_tok = jnp.argmax(out.logits[:, -1], axis=-1)
         return next_tok, out.caches
     return decode

@@ -1,4 +1,5 @@
-from repro.serving.engine import (ServeEngine, EngineConfig, Request,
-                                  prune_kv_caches)
+from repro.serving.engine import (ServeEngine, EngineConfig, ElasticContext,
+                                  Request, prune_kv_caches)
 
-__all__ = ["ServeEngine", "EngineConfig", "Request", "prune_kv_caches"]
+__all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
+           "prune_kv_caches"]

@@ -1,18 +1,42 @@
-"""Batched serving engine: prefill + decode loop with continuous batching
-slots and the beyond-paper dynamic KV-cache pruning.
+"""Batched serving engine: static-wave and continuous (slot-based) batching
+over shared jitted prefill/decode steps, with beyond-paper dynamic KV-cache
+pruning and elastic degradation on device loss.
 
-The KV pruning is the paper's token-scoring adapted to autoregressive
-decode: attention mass accumulated per cached token (KVCache.attn_mass,
-maintained by the decode path) ranks cache entries; every
+Serve paths
+-----------
+* ``run``            — static waves: up to ``max_batch`` requests prefill
+  together and decode in lockstep until the longest request finishes.
+* ``run_continuous`` — continuous batching: ``max_batch`` fixed decode
+  slots; waiting requests are admitted into slots as earlier requests
+  finish (``Request.done``). Admission re-prefills the active prefixes
+  (left-padded to a common length) so every jitted call keeps a static
+  batch shape; slots then decode together until the next admission.
+
+Left-padding is masked wherever it matters: the per-slot ``valid_start``
+(index of the first real token) is threaded through prefill/decode
+attention masks and the KV ``attn_mass`` accumulation, so pad slots never
+compete with real tokens — neither in attention nor in KV-cache pruning.
+
+KV pruning is the paper's token-scoring adapted to autoregressive decode:
+attention mass accumulated per cached token ranks cache entries; every
 ``kv_prune_interval`` steps the engine compacts each layer's cache to the
-top ``kv_prune_keep`` fraction. This bounds decode memory *and* the
-per-step attention read — the decode-shape memory roofline term scales by
-``kv_prune_keep``.
+top ``kv_prune_keep`` fraction (skipped while the cache is still shorter
+than the target — there is nothing to prune). This bounds decode memory
+*and* the per-step attention read — the decode-shape memory roofline term
+scales by ``kv_prune_keep``.
+
+Elastic degradation (ROADMAP repro.dist): construct the engine with an
+``ElasticContext`` and ``run_continuous`` probes ``device_count()`` every
+step. On device loss it walks ``dist.elastic.degradation_path`` to the
+first plan that fits, rebuilds the mesh, re-shards the weights via
+``CheckpointManager.restore(..., shardings=...)``, and keeps serving at
+the reduced data-parallel width — in-flight requests are re-prefilled on
+the new mesh, no request is dropped.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +44,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import token_pruning as TP
+from repro.dist.elastic import MeshPlan, degradation_path, first_fit
 from repro.models import attention as A
 from repro.models import steps as ST
+
+# Families whose serve state is pure KV cache — left-padding can be masked
+# exactly. Recurrent families (ssm, hybrid mamba states) absorb pad tokens
+# into state, so the engine serves them without the valid_start masking
+# (pre-existing behavior; see forward_lm docstring).
+_MASKABLE = ("dense", "moe", "vlm", "audio")
 
 
 @dataclasses.dataclass
@@ -35,28 +66,50 @@ class Request:
 
 @dataclasses.dataclass
 class EngineConfig:
-    max_batch: int = 8
+    max_batch: int = 8          # wave width / continuous decode slots
     max_len: int = 512
     kv_prune_interval: int = 0   # 0 = off
     kv_prune_keep: float = 1.0
+
+
+@dataclasses.dataclass
+class ElasticContext:
+    """Everything ``run_continuous`` needs to survive simulated device loss.
+
+    ``manager`` must hold a checkpoint of the engine's params (saved by the
+    launcher before serving starts); ``device_count`` is the live-capacity
+    probe the engine polls between steps (tests inject losses through it).
+    """
+    manager: Any                      # CheckpointManager with the weights
+    plan: MeshPlan                    # healthy mesh plan
+    budgets: Sequence[int]            # degradation_path device budgets
+    device_count: Callable[[], int]   # live device probe
+    step: Optional[int] = None        # checkpoint step (None = latest)
 
 
 class ServeEngine:
     """Single-host reference engine (the multi-pod serve path lowers the
     same prefill/decode step functions through launch/serve.py)."""
 
-    def __init__(self, cfg: ModelConfig, params: Any, ec: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, ec: EngineConfig,
+                 elastic: Optional[ElasticContext] = None):
         self.cfg = cfg
         self.params = params
         self.ec = ec
+        self.elastic = elastic
         self.prefill = jax.jit(ST.make_prefill(cfg))
         self.decode = jax.jit(ST.make_decode_step(cfg))
         self.steps_since_prune = 0
+        self._masked = cfg.family in _MASKABLE
+        self._plan = elastic.plan if elastic is not None else None
+        self.events: List[Tuple[str, Any]] = []
+        self.prune_events = 0
 
     # ------------------------------------------------------------------
+    # Static-wave path
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve a list of requests with static batching per wave (the
-        continuous-batching slot logic lives in ``run_continuous``)."""
+        """Serve a list of requests with static batching per wave."""
         out: Dict[int, List[int]] = {}
         for wave_start in range(0, len(requests), self.ec.max_batch):
             wave = requests[wave_start: wave_start + self.ec.max_batch]
@@ -64,52 +117,232 @@ class ServeEngine:
         return out
 
     def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
-        B = len(wave)
-        S = max(len(r.prompt) for r in wave)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-        caches = ST.init_caches(self.cfg, B, self.ec.max_len)
-        batch = {"tokens": jnp.asarray(toks)}
-        tok, caches = self.prefill(self.params, batch, caches)
         max_new = max(r.max_new_tokens for r in wave)
+        S = max(len(r.prompt) for r in wave)
+        self._check_capacity(S + max_new - 1)
+        tok, caches, starts, cur_len = self._prefill_batch(
+            [np.asarray(r.prompt, np.int32) for r in wave])
         gen = [tok]
-        for step in range(max_new - 1):
-            caches = self._maybe_prune_kv(caches)
-            tok, caches = self.decode(self.params, tok[:, None], caches)
+        for _ in range(max_new - 1):
+            caches, starts, cur_len = self._maybe_prune_kv(
+                caches, starts, cur_len)
+            self._check_overflow(cur_len)
+            tok, caches = self.decode(self.params, tok[:, None], caches,
+                                      valid_start=starts)
+            cur_len += 1
             gen.append(tok)
         gen = np.stack([np.asarray(g) for g in gen], axis=1)  # [B, T]
-        return {r.uid: gen[i, : r.max_new_tokens].tolist()
-                for i, r in enumerate(wave)}
+        out = {}
+        for i, r in enumerate(wave):
+            r.generated = gen[i, : r.max_new_tokens].tolist()
+            r.done = True
+            out[r.uid] = r.generated
+        return out
 
     # ------------------------------------------------------------------
-    def _maybe_prune_kv(self, caches):
+    # Continuous-batching path
+    # ------------------------------------------------------------------
+    def run_continuous(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve with ``max_batch`` decode slots and per-request admission.
+
+        Requests wait in FIFO order; a slot frees as soon as its request
+        reaches ``max_new_tokens`` (``Request.done``). Admission and elastic
+        degradation both trigger a re-prefill of every active prefix, which
+        re-derives the same greedy continuation for in-flight requests
+        (prefill over a prefix is mathematically the decode that produced
+        it). Inactive slots carry a single dummy token and are masked via
+        ``valid_start``; their outputs are discarded.
+        """
+        ec = self.ec
+        pending: List[Request] = list(requests)
+        slots: List[Optional[Request]] = [None] * ec.max_batch
+        out: Dict[int, List[int]] = {}
+        tok = caches = starts = None
+        cur_len = 0
+
+        while pending or any(r is not None for r in slots):
+            if self.elastic is not None:
+                avail = self.elastic.device_count()
+                if avail < self._plan.num_devices:
+                    self._degrade(avail)
+                    tok = None  # re-prefill on the degraded mesh
+            for i in range(ec.max_batch):
+                if slots[i] is None and pending:
+                    slots[i] = pending.pop(0)
+                    self.events.append(("admit", slots[i].uid))
+                    tok = None  # admission re-prefills the batch
+            if tok is None:
+                tok, caches, starts, cur_len = self._prefill_slots(slots)
+            else:
+                caches, starts, cur_len = self._maybe_prune_kv(
+                    caches, starts, cur_len)
+                self._check_overflow(cur_len)
+                tok, caches = self.decode(self.params, tok[:, None], caches,
+                                          valid_start=starts)
+                cur_len += 1
+            toks = np.asarray(tok)
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                r.generated.append(int(toks[i]))
+                if len(r.generated) >= r.max_new_tokens:
+                    r.done = True
+                    out[r.uid] = list(r.generated)
+                    slots[i] = None  # slot freed for the next admission
+                    self.events.append(("retire", r.uid))
+        return out
+
+    def _prefill_slots(self, slots: List[Optional[Request]]):
+        """(Re-)prefill every active slot's full prefix (prompt + generated
+        so far), left-padded to a common length; inactive slots get a single
+        dummy token. Returns (next_token, caches, valid_start, cur_len)."""
+        prefixes: List[Optional[np.ndarray]] = []
+        for r in slots:
+            if r is None:
+                prefixes.append(None)
+                continue
+            p = np.asarray(r.prompt, np.int32)
+            if r.generated:
+                p = np.concatenate(
+                    [p, np.asarray(r.generated, np.int32)])
+            prefixes.append(p)
+        # worst case before the next re-prefill: the longest (left-padded)
+        # prefix decodes until the slowest slot retires
+        L = max(len(p) for p in prefixes if p is not None)
+        rem = max(r.max_new_tokens - len(r.generated)
+                  for r in slots if r is not None)
+        self._check_capacity(L + rem - 1)
+        return self._prefill_batch(prefixes)
+
+    # ------------------------------------------------------------------
+    # Shared batch construction + capacity guards
+    # ------------------------------------------------------------------
+    def _prefill_batch(self, prefixes: List[Optional[np.ndarray]]):
+        """Left-pad ``prefixes`` (None = inactive slot -> one dummy token)
+        to their common length, build fresh caches + valid_start, and run
+        prefill. Returns (next_token, caches, valid_start, cur_len)."""
+        self.steps_since_prune = 0  # fresh caches, fresh prune cadence
+        ec = self.ec
+        B = len(prefixes)
+        L = max(len(p) for p in prefixes if p is not None)
+        if L > ec.max_len:
+            raise RuntimeError(
+                f"prompt of {L} tokens exceeds max_len={ec.max_len}")
+        toks = np.zeros((B, L), np.int32)
+        starts_np = np.full((B,), max(L - 1, 0), np.int32)  # dummy slots
+        for i, p in enumerate(prefixes):
+            if p is None:
+                continue
+            toks[i, L - len(p):] = p
+            starts_np[i] = L - len(p)
+        caches = ST.init_caches(self.cfg, B, ec.max_len)
+        starts = jnp.asarray(starts_np) if self._masked else None
+        batch = {"tokens": jnp.asarray(toks)}
+        if starts is not None:
+            batch["valid_start"] = starts
+        tok, caches = self.prefill(self.params, batch, caches)
+        return tok, caches, starts, L
+
+    def _check_capacity(self, high_water: int) -> None:
+        """Reject up-front a workload whose cache high-water mark cannot
+        fit. Only decidable when KV pruning is off — pruning bounds the
+        cache dynamically, so pruned runs rely on ``_check_overflow``."""
+        ec = self.ec
+        pruning = ec.kv_prune_interval > 0 and ec.kv_prune_keep < 1.0
+        if not pruning and high_water > ec.max_len:
+            raise RuntimeError(
+                f"max_len={ec.max_len} cannot hold {high_water} tokens "
+                "(left-padded prefix + remaining decode); raise "
+                "EngineConfig.max_len")
+
+    def _check_overflow(self, cur_len: int) -> None:
+        if cur_len >= self.ec.max_len:
+            raise RuntimeError(
+                f"KV cache overflow: decode step would write at "
+                f"{cur_len} >= max_len={self.ec.max_len}")
+
+    # ------------------------------------------------------------------
+    # Elastic degradation
+    # ------------------------------------------------------------------
+    def _degrade(self, avail: int) -> None:
+        """Walk the degradation ladder to a plan fitting ``avail`` devices,
+        rebuild the mesh, and re-shard the weights onto it from the
+        checkpoint (CheckpointManager.restore with the new shardings)."""
+        from repro.dist import sharding as SH
+        from repro.launch.mesh import make_mesh
+
+        ladder = degradation_path(self.elastic.plan,
+                                  list(self.elastic.budgets))
+        new_plan = first_fit(ladder, avail)
+        if new_plan is None:
+            raise RuntimeError(
+                f"no degradation plan fits {avail} surviving devices "
+                f"(ladder: {[p.describe() for p in ladder]})")
+        if new_plan == self._plan:
+            return
+        mesh = make_mesh(new_plan.shape, new_plan.axes)
+        shardings = SH.params_shardings(self.cfg, mesh, self.params)
+        self.params = self.elastic.manager.restore(
+            self.params, step=self.elastic.step, shardings=shardings)
+        self._plan = new_plan
+        self.events.append(("degrade", new_plan.describe()))
+
+    # ------------------------------------------------------------------
+    # Dynamic KV pruning
+    # ------------------------------------------------------------------
+    def _maybe_prune_kv(self, caches, starts, cur_len: int):
+        """Returns (caches, starts, cur_len) — compacted when the cadence
+        fires and the cache has outgrown the keep target."""
         ec = self.ec
         if ec.kv_prune_interval <= 0 or ec.kv_prune_keep >= 1.0:
-            return caches
+            return caches, starts, cur_len
+        keep = max(1, min(int(ec.max_len * ec.kv_prune_keep), ec.max_len))
         self.steps_since_prune += 1
-        if self.steps_since_prune < ec.kv_prune_interval:
-            return caches
+        if self.steps_since_prune < ec.kv_prune_interval or cur_len < keep:
+            return caches, starts, cur_len
         self.steps_since_prune = 0
-        return prune_kv_caches(caches, ec.kv_prune_keep)
+        self.prune_events += 1
+        caches, new_starts = prune_kv_caches(caches, ec.kv_prune_keep,
+                                             starts=starts)
+        return caches, (new_starts if self._masked else None), keep
 
 
-def prune_kv_caches(caches: Any, keep_frac: float) -> Any:
+def prune_kv_caches(caches: Any, keep_frac: float,
+                    starts: Optional[jax.Array] = None) -> Tuple[Any, Any]:
     """Compact every KVCache to its top-``keep_frac`` attention-mass slots.
 
-    Stacked caches ([L, ...]) are handled with vmap. The kept entries move
-    to the front, ``length`` shrinks, and attention mass resets (so the
-    ranking adapts as decoding proceeds)."""
-    def one(c: A.KVCache) -> A.KVCache:
+    Stacked caches ([L, ...]) are handled with vmap. ``starts`` ([B] int32)
+    marks per-slot left-padding; pad slots score ``-inf`` and are never kept
+    ahead of real tokens. Kept entries are packed so each slot's valid
+    window ends at ``keep``: when a slot has fewer than ``keep`` valid
+    entries, the (zeroed) garbage sits at the *front*, which the returned
+    ``new_starts`` ([B] int32) masks — the compacted cache is left-padded
+    exactly like the prompts were. ``length`` becomes ``min(length, keep)``
+    per layer and attention mass resets (so the ranking adapts as decoding
+    proceeds).
+
+    Returns ``(pruned_caches, new_starts)``.
+    """
+    def one(c):
+        if not isinstance(c, A.KVCache):
+            return c  # recurrent state (ssm/mamba) passes through untouched
+
         def single(k, v, length, mass):
             n = k.shape[1]
-            keep = max(1, int(n * keep_frac))
-            scores = TP.kv_prune_scores(mass, length)
-            idx = TP.select_kv_keep(scores, keep)
+            keep = max(1, min(int(n * keep_frac), n))
+            scores = TP.kv_prune_scores(mass, length, start=starts)
+            idx = TP.select_kv_keep(scores, keep, invalid_first=True)
             k2, v2 = TP.compact_kv_cache(k, v, idx)
+            # zero the invalid (garbage) prefix each slot may carry
+            n_valid = jnp.clip(
+                length - (starts if starts is not None else 0), 0, keep)
+            pos = jnp.arange(keep)
+            valid = pos[None, :] >= (keep - n_valid)[..., None]
+            k2 = jnp.where(valid[..., None, None], k2, 0)
+            v2 = jnp.where(valid[..., None, None], v2, 0)
             k_new = jnp.zeros_like(k).at[:, :keep].set(k2)
             v_new = jnp.zeros_like(v).at[:, :keep].set(v2)
-            new_len = jnp.minimum(length, keep)
+            new_len = jnp.full_like(length, keep)
             new_mass = jnp.zeros_like(mass)
             return A.KVCache(k_new, v_new, new_len, new_mass)
 
@@ -118,4 +351,18 @@ def prune_kv_caches(caches: Any, keep_frac: float) -> Any:
         return single(c.k, c.v, c.length, c.attn_mass)
 
     is_kv = lambda x: isinstance(x, A.KVCache)
-    return jax.tree.map(one, caches, is_leaf=is_kv)
+    pruned = jax.tree.map(one, caches, is_leaf=is_kv)
+    kv_leaves = [l for l in jax.tree_util.tree_leaves(caches, is_leaf=is_kv)
+                 if isinstance(l, A.KVCache)]
+    if not kv_leaves:  # pure recurrent state: nothing compacted
+        return pruned, starts
+    # analytic per-slot garbage prefix — identical for every layer because
+    # it depends only on length/starts/keep, not the per-layer attn mass
+    first = kv_leaves[0]
+    n = first.k.shape[-3]
+    keep = max(1, min(int(n * keep_frac), n))
+    base = (starts if starts is not None
+            else jnp.zeros((first.k.shape[-4],), jnp.int32))
+    n_valid = jnp.clip(jnp.max(first.length) - base, 0, keep)
+    new_starts = (keep - n_valid).astype(jnp.int32)
+    return pruned, new_starts

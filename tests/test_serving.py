@@ -1,4 +1,10 @@
-"""Serving engine + dynamic KV pruning tests."""
+"""Serving engine + dynamic KV pruning tests: static waves, the
+continuous-batching slot path, pad masking, and elastic degradation."""
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,38 +44,266 @@ def test_engine_deterministic(engine_setup):
     assert o1 == o2
 
 
+def _with_mass(caches, seed=0):
+    def one(c):
+        if isinstance(c, A.KVCache):
+            mass = jnp.asarray(
+                np.random.default_rng(seed).random(c.attn_mass.shape),
+                jnp.float32)
+            return c._replace(attn_mass=mass)
+        return c
+    return jax.tree.map(one, caches,
+                        is_leaf=lambda x: isinstance(x, A.KVCache))
+
+
 def test_kv_pruning_preserves_shapes_and_shrinks_length(engine_setup):
     cfg, params = engine_setup
     from repro.models import steps as ST
     caches = ST.init_caches(cfg, 2, 32)
     caches = ST.set_cache_length(cfg, caches, 16)
-    # fake accumulated attention mass
-    def with_mass(c):
-        if isinstance(c, A.KVCache):
-            mass = jnp.asarray(
-                np.random.default_rng(0).random(c.attn_mass.shape),
-                jnp.float32)
-            return c._replace(attn_mass=mass)
-        return c
-    caches = jax.tree.map(with_mass, caches,
-                          is_leaf=lambda x: isinstance(x, A.KVCache))
-    pruned = prune_kv_caches(caches, keep_frac=0.5)
-    flat_old = [c for c in jax.tree_util.tree_leaves(caches)]
-    flat_new = [c for c in jax.tree_util.tree_leaves(pruned)]
+    pruned, new_starts = prune_kv_caches(_with_mass(caches), keep_frac=0.5)
+    flat_old = jax.tree_util.tree_leaves(caches)
+    flat_new = jax.tree_util.tree_leaves(pruned)
     for o, n in zip(flat_old, flat_new):
         assert o.shape == n.shape
-    # lengths shrank to <= keep
+    # lengths shrank to <= keep, and unpadded slots have no garbage prefix
+    np.testing.assert_array_equal(np.asarray(new_starts), 0)
     def check(c):
         if isinstance(c, A.KVCache):
             assert int(np.max(np.asarray(c.length))) <= 16
     jax.tree.map(check, pruned, is_leaf=lambda x: isinstance(x, A.KVCache))
 
 
+def test_kv_pruning_pad_slots_never_kept(engine_setup):
+    """Left-pad positions must lose to real tokens in the KV compaction
+    even when their accumulated mass is (artificially) enormous."""
+    cfg, params = engine_setup
+    from repro.models import steps as ST
+    caches = ST.init_caches(cfg, 2, 32)
+    caches = ST.set_cache_length(cfg, caches, 16)
+    starts = jnp.asarray([0, 6], jnp.int32)  # slot 1 left-padded 6 deep
+
+    def poison(c):
+        if isinstance(c, A.KVCache):
+            mass = jnp.asarray(
+                np.random.default_rng(1).random(c.attn_mass.shape),
+                jnp.float32)
+            mass = mass.at[..., 1, :6].set(1e6)  # pad slots look "important"
+            # make every key recognizably nonzero so garbage zeroing shows
+            k = jnp.ones_like(c.k)
+            return c._replace(attn_mass=mass, k=k, v=k)
+        return c
+
+    caches = jax.tree.map(poison, caches,
+                          is_leaf=lambda x: isinstance(x, A.KVCache))
+    pruned, new_starts = prune_kv_caches(caches, keep_frac=0.5, starts=starts)
+    keep = 16  # 0.5 * 32
+    # slot 0: 16 valid entries -> full window; slot 1: 10 valid -> 6 garbage
+    np.testing.assert_array_equal(np.asarray(new_starts), [0, 6])
+
+    def check(c):
+        if isinstance(c, A.KVCache):
+            k = np.asarray(c.k, np.float32)
+            # slot 1's garbage prefix is zeroed; its valid window is intact
+            assert (k[..., 1, :6, :, :] == 0).all()
+            assert (k[..., 1, 6:keep, :, :] != 0).all()
+            assert (k[..., 0, :keep, :, :] != 0).all()
+    jax.tree.map(check, pruned, is_leaf=lambda x: isinstance(x, A.KVCache))
+
+
 def test_kv_pruned_decode_still_runs(engine_setup):
     cfg, params = engine_setup
     eng = ServeEngine(cfg, params, EngineConfig(
-        max_batch=2, max_len=64, kv_prune_interval=2, kv_prune_keep=0.5))
-    reqs = [Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+        max_batch=2, max_len=24, kv_prune_interval=2, kv_prune_keep=0.5))
+    reqs = [Request(uid=0, prompt=np.arange(14, dtype=np.int32),
                     max_new_tokens=8)]
     out = eng.run(reqs)
     assert len(out[0]) == 8
+    assert eng.prune_events > 0  # cache outgrew keep=12, pruning fired
+
+
+def test_prune_cadence_resets_per_wave(engine_setup):
+    """steps_since_prune must not leak across waves: two 3-step waves under
+    interval=5 never prune, and identical requests in wave 1 and wave 2
+    produce identical outputs."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_batch=1, max_len=16, kv_prune_interval=5, kv_prune_keep=0.5))
+    mk = lambda uid: Request(uid=uid, prompt=np.arange(8, dtype=np.int32),
+                             max_new_tokens=4)
+    out = eng.run([mk(0), mk(1)])  # max_batch=1 -> two consecutive waves
+    assert eng.prune_events == 0   # 3+3 decode steps, cadence reset between
+    assert out[0] == out[1]        # wave 2 not perturbed by wave 1's count
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+def _mixed_requests():
+    return [Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=6),
+            Request(uid=1, prompt=np.arange(7, dtype=np.int32) + 3,
+                    max_new_tokens=3),
+            Request(uid=2, prompt=np.arange(5, dtype=np.int32) + 9,
+                    max_new_tokens=5)]
+
+
+def test_continuous_matches_static_single_wave(engine_setup):
+    """With every request admitted at t=0 the slot engine runs the same
+    prefill + decode sequence as a static wave — outputs must be equal."""
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=3, max_len=64)
+    static = ServeEngine(cfg, params, ec).run(_mixed_requests())
+    cont = ServeEngine(cfg, params, ec).run_continuous(_mixed_requests())
+    assert static == cont
+
+
+def test_continuous_slot_reuse_after_done(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+    reqs = [Request(uid=i, prompt=np.arange(3 + i % 4, dtype=np.int32) + i,
+                    max_new_tokens=2 + (i % 3)) for i in range(6)]
+    out = eng.run_continuous(reqs)
+    assert sorted(out) == list(range(6))
+    assert all(len(out[r.uid]) == r.max_new_tokens for r in reqs)
+    assert all(r.done for r in reqs)
+    # slots were actually reused: more admissions than slots
+    admits = [e for e in eng.events if e[0] == "admit"]
+    assert len(admits) == 6
+
+
+def test_continuous_with_kv_pruning(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=24, kv_prune_interval=2, kv_prune_keep=0.5))
+    reqs = [Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                    max_new_tokens=8),
+            Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=10),
+            Request(uid=2, prompt=np.arange(6, dtype=np.int32) + 2,
+                    max_new_tokens=4)]
+    out = eng.run_continuous(reqs)
+    assert {k: len(v) for k, v in out.items()} == {0: 8, 1: 10, 2: 4}
+    assert eng.prune_events > 0
+    assert all(0 <= t < cfg.vocab_size for v in out.values() for t in v)
+
+
+def test_continuous_overflow_raises(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=1, max_len=8))
+    with pytest.raises(RuntimeError, match="max_len"):
+        eng.run_continuous([Request(uid=0,
+                                    prompt=np.arange(6, dtype=np.int32),
+                                    max_new_tokens=16)])
+
+
+def test_capacity_accounts_for_left_padding(engine_setup):
+    """A short prompt with a long decode budget is left-padded to the
+    longest prompt in the batch, so its writes reach pad + prompt + new —
+    the capacity check must use the padded length, not each request's own
+    prompt length (regression: used to pass the check then crash
+    mid-stream after the outputs were already half-generated)."""
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=40)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(30, dtype=np.int32),
+                            max_new_tokens=4),
+                    Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=30)]
+    with pytest.raises(RuntimeError, match="max_len"):
+        ServeEngine(cfg, params, ec).run_continuous(reqs())
+    with pytest.raises(RuntimeError, match="max_len"):
+        ServeEngine(cfg, params, ec).run(reqs())
+    ok = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+    out = ok.run_continuous(reqs())
+    assert {k: len(v) for k, v in out.items()} == {0: 4, 1: 30}
+
+
+def test_static_wave_overflow_raises_not_corrupts(engine_setup):
+    """The static path must refuse prompt+max_new > max_len instead of
+    silently clamping cache writes onto the last slot."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=1, max_len=16))
+    with pytest.raises(RuntimeError, match="max_len"):
+        eng.run([Request(uid=0, prompt=np.arange(12, dtype=np.int32),
+                         max_new_tokens=10)])
+
+
+def test_prune_kv_caches_recurrent_state_passthrough():
+    """ssm/hybrid serve states contain non-KVCache leaves — pruning must
+    pass them through untouched instead of crashing."""
+    from repro.models import steps as ST
+    cfg = get_config("rwkv6-1.6b").reduced()
+    states = ST.init_caches(cfg, 2, 16)
+    pruned, new_starts = prune_kv_caches(states, keep_frac=0.5)
+    for a, b in zip(jax.tree_util.tree_leaves(states),
+                    jax.tree_util.tree_leaves(pruned)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert new_starts is None  # nothing compacted, starts unchanged
+
+    cfg_h = get_config("zamba2-1.2b").reduced()
+    hybrid = ST.set_cache_length(cfg_h, ST.init_caches(cfg_h, 2, 16), 8)
+    pruned_h, starts_h = prune_kv_caches(_with_mass(hybrid), keep_frac=0.5)
+    def check(c):
+        if isinstance(c, A.KVCache):
+            assert int(np.max(np.asarray(c.length))) <= 8
+    jax.tree.map(check, pruned_h, is_leaf=lambda x: isinstance(x, A.KVCache))
+    assert starts_h is not None
+
+
+def test_decode_pad_slots_accumulate_no_mass(engine_setup):
+    """attn_mass at left-pad positions must stay exactly zero through
+    prefill + decode so pad slots never compete in KV pruning."""
+    cfg, params = engine_setup
+    from repro.models import steps as ST
+    prefill = jax.jit(ST.make_prefill(cfg))
+    decode = jax.jit(ST.make_decode_step(cfg))
+    toks = np.zeros((2, 8), np.int32)
+    toks[0, :] = np.arange(8)
+    toks[1, 5:] = np.arange(3)           # 5 pad positions
+    starts = jnp.asarray([0, 5], jnp.int32)
+    caches = ST.init_caches(cfg, 2, 16)
+    batch = {"tokens": jnp.asarray(toks), "valid_start": starts}
+    tok, caches = prefill(params, batch, caches)
+    for _ in range(3):
+        tok, caches = decode(params, tok[:, None], caches,
+                             valid_start=starts)
+
+    def check(c):
+        if isinstance(c, A.KVCache):
+            mass = np.asarray(c.attn_mass)
+            assert (mass[..., 1, :5] == 0).all()      # pads: zero mass
+            assert (mass[..., 1, 5:11] > 0).all()     # real tokens: mass
+    jax.tree.map(check, caches, is_leaf=lambda x: isinstance(x, A.KVCache))
+
+
+# ---------------------------------------------------------------------------
+# Elastic degradation (subprocess: needs a forced multi-device host)
+# ---------------------------------------------------------------------------
+def _serve_cli(extra, env_extra):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               **env_extra)
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "stablelm-1.6b", "--continuous", "--json",
+           "--requests", "4", "--prompt-len", "6", "--max-new", "6",
+           "--max-batch", "2"] + extra
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=520,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_continuous_degradation_replans_and_finishes():
+    """Force a device loss mid-stream: the engine must walk the degradation
+    ladder, re-shard from the checkpoint, finish every request, and produce
+    the same tokens as an undisturbed run."""
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    healthy = _serve_cli([], env)
+    degraded = _serve_cli(["--elastic-drop", "3"], env)
+    assert [e for e in degraded["events"] if e[0] == "degrade"], \
+        degraded["events"]
+    assert sorted(degraded["outputs"]) == ["0", "1", "2", "3"]
+    assert all(len(v) == 6 for v in degraded["outputs"].values())
+    assert degraded["outputs"] == healthy["outputs"]

@@ -114,6 +114,48 @@ def test_kv_prune_scores_masks_invalid():
     assert bool((s[0, :5] == 1.0).all())
 
 
+def test_kv_prune_scores_masks_left_padding():
+    """Per-slot ``start`` masks the left-pad prefix alongside the tail."""
+    mass = jnp.ones((2, 8))
+    s = tp.kv_prune_scores(mass, cache_len=6, start=jnp.asarray([0, 3]))
+    assert bool((s[0, :6] == 1.0).all())
+    assert bool(jnp.isneginf(s[1, :3]).all())   # pads masked
+    assert bool((s[1, 3:6] == 1.0).all())
+    assert bool(jnp.isneginf(s[:, 6:]).all())
+
+
+def test_select_kv_keep_never_picks_masked_pads():
+    """Regression (serving left-pad bug): pad slots must never be selected
+    while enough real tokens exist, even with huge accumulated mass."""
+    mass = jnp.asarray(np.random.default_rng(0).random((2, 16)), jnp.float32)
+    mass = mass.at[1, :4].set(1e9)  # poisoned pad mass
+    starts = jnp.asarray([0, 4])
+    scores = tp.kv_prune_scores(mass, cache_len=16, start=starts)
+    idx = np.asarray(tp.select_kv_keep(scores, 8))
+    assert (idx[1] >= 4).all()      # no pad index survives
+    assert len(set(idx[1].tolist())) == 8
+
+
+def test_select_kv_keep_clamps_keep_beyond_width():
+    mass = jnp.ones((1, 8))
+    idx = tp.select_kv_keep(mass, keep=20)  # clamped to 8
+    assert idx.shape == (1, 8)
+    assert sorted(np.asarray(idx[0]).tolist()) == list(range(8))
+
+
+def test_select_kv_keep_groups_invalid_picks():
+    """keep > valid count: -inf picks must not interleave with real ones —
+    valid indices stay in temporal order at the front (default) or back
+    (invalid_first=True, the compaction layout)."""
+    scores = tp.kv_prune_scores(jnp.ones((1, 8)), cache_len=3)
+    idx = np.asarray(tp.select_kv_keep(scores, 5))[0]
+    assert idx[:3].tolist() == [0, 1, 2]        # valid, temporal order
+    assert (idx[3:] >= 3).all()                  # invalid packed at back
+    idx_f = np.asarray(tp.select_kv_keep(scores, 5, invalid_first=True))[0]
+    assert idx_f[-3:].tolist() == [0, 1, 2]     # valid at the back
+    assert (idx_f[:2] >= 3).all()                # garbage prefix
+
+
 def test_lm_prefill_token_pruning():
     """TDM applied to a causal LM prompt: fewer tokens after TDM layers,
     finite last-token logits, and with r_t=1-ish behaviour approaching the
