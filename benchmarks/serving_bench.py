@@ -1,36 +1,41 @@
-"""Static-wave vs continuous-batching serving throughput.
+"""Static-wave vs continuous-batching serving throughput + admission cost.
 
 A static wave holds every slot until the *longest* request in the wave
 finishes, so skewed request lengths strand capacity; the continuous path
 re-admits waiting requests into slots the moment one retires. This bench
-serves an identical skewed request mix through both paths and reports
-tokens/s — the continuous speedup is the scheduling win, independent of
-the per-step kernel costs.
+serves an identical skewed request mix through three paths and reports
+tokens/s plus the two costs the PR-3 redesign targets:
 
-Caveat at reference scale: every admission re-prefills the batch at a new
-prefix length, which jit-recompiles — on a CPU-reduced model that compile
-cost dominates and continuous can *lose*. The ROADMAP open item (per-slot
-prefill writes + prefix-length bucketing) removes exactly this overhead;
-the bench exists to make the crossover measurable.
+* ``prefill tok/admit`` — padded tokens run per admission. The legacy
+  continuous path (``cont-reprefill``, PR-2 behavior) re-prefills *every*
+  active prefix on each admission, so this grows with slot occupancy; the
+  per-slot path prefills only the admitted prompt's bucket — independent
+  of how many slots are active (the admission-cost acceptance criterion).
+* ``jit compiles``      — distinct XLA compilations. Legacy re-prefill
+  compiles per distinct padded batch length; prefix-length bucketing
+  bounds the per-slot path to one compile per bucket.
 
     PYTHONPATH=src python benchmarks/serving_bench.py            # full
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI lane
 
-``--smoke`` runs a seconds-scale configuration and exits non-zero if either
-path fails to serve every request (the CI fast lane runs it so serving-path
-regressions fail visibly).
+A ``BENCH_serving.json`` artifact (all rows + config) is written next to
+the working directory (``--out`` overrides). ``--smoke`` runs a
+seconds-scale configuration and exits non-zero if any path fails to serve
+every request (the CI fast lane runs it so serving-path regressions fail
+visibly).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
-
-import numpy as np
 
 
 def make_requests(cfg, num: int, prompt_lo: int, prompt_hi: int,
                   new_lo: int, new_hi: int, seed: int):
+    import numpy as np
+
     from repro.serving import Request
     rng = np.random.default_rng(seed)
     reqs = []
@@ -43,39 +48,62 @@ def make_requests(cfg, num: int, prompt_lo: int, prompt_hi: int,
     return reqs
 
 
+MODES = (
+    # (name, continuous, per_slot_prefill)
+    ("static", False, True),
+    ("cont-reprefill", True, False),   # PR-2 baseline: whole-batch re-prefill
+    ("continuous", True, True),        # per-slot prefill admission
+)
+
+
 def bench(arch: str, num: int, slots: int, prompt_lo: int, prompt_hi: int,
           new_lo: int, new_hi: int, kv_prune: float, seed: int):
     import jax
+
     from repro.configs import get_config
     from repro.models import model as M
     from repro.serving import EngineConfig, ServeEngine
 
     cfg = get_config(arch).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
-    ec = EngineConfig(
-        max_batch=slots,
-        # continuous re-prefill pads a finished-prefix slot (prompt + up to
-        # new_hi generated) against a slot with up to new_hi still to go,
-        # so the cache high-water mark is prompt_hi + 2*new_hi - 1
-        max_len=prompt_hi + 2 * new_hi + 8,
-        kv_prune_interval=4 if kv_prune < 1.0 else 0,
-        kv_prune_keep=kv_prune)
 
     results = {}
-    for mode in ("static", "continuous"):
+    for mode, continuous, per_slot in MODES:
+        ec = EngineConfig(
+            max_batch=slots,
+            # legacy re-prefill pads a finished-prefix slot (prompt + up to
+            # new_hi generated) against a slot with up to new_hi still to
+            # go, so the cache high-water mark is prompt_hi + 2*new_hi - 1
+            max_len=prompt_hi + 2 * new_hi + 8,
+            kv_prune_interval=4 if kv_prune < 1.0 else 0,
+            kv_prune_keep=kv_prune,
+            per_slot_prefill=per_slot)
         engine = ServeEngine(cfg, params, ec)
         reqs = make_requests(cfg, num, prompt_lo, prompt_hi,
                              new_lo, new_hi, seed)
-        run = engine.run if mode == "static" else engine.run_continuous
-        run(make_requests(cfg, min(num, slots), prompt_lo, prompt_hi,
-                          new_lo, new_lo, seed + 1))  # warmup/compile
+        engine.serve(  # warmup/compile
+            make_requests(cfg, min(num, slots), prompt_lo, prompt_hi,
+                          new_lo, new_lo, seed + 1), continuous=continuous)
+        # snapshot so every reported stat covers ONLY the measured run
+        warm = engine.stats()
         t0 = time.time()
-        out = run(reqs)
+        out = engine.serve(reqs, continuous=continuous)
         dt = time.time() - t0
         tokens = sum(len(v) for v in out.values())
-        results[mode] = {"seconds": dt, "tokens": tokens,
-                         "tok_s": tokens / dt, "served": len(out),
-                         "expected": num}
+        st = engine.stats()
+        admissions = st["admissions"] - warm["admissions"]
+        prefill_tokens = (st["admission_prefill_tokens"]
+                          - warm["admission_prefill_tokens"])
+        results[mode] = {
+            "seconds": dt, "tokens": tokens, "tok_s": tokens / dt,
+            "served": len(out), "expected": num,
+            "admissions": admissions,
+            "prefill_tok_per_admission":
+                prefill_tokens / admissions if admissions else 0.0,
+            "jit_compiles": engine.runner.jit_compile_count(),
+            "jit_compiles_measured_run":
+                engine.runner.jit_compile_count() - warm["jit_compile_count"],
+        }
     return results
 
 
@@ -90,6 +118,8 @@ def main():
     ap.add_argument("--new-hi", type=int, default=24)
     ap.add_argument("--kv-prune", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON artifact path")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run for the CI fast lane")
     args = ap.parse_args()
@@ -102,13 +132,29 @@ def main():
                 args.prompt_hi, args.new_lo, args.new_hi, args.kv_prune,
                 args.seed)
     ok = True
+    hdr = (f"{'mode':15s} {'tok/s':>8s} {'served':>8s} "
+           f"{'prefill tok/admit':>18s} {'jit compiles':>13s}")
+    print(hdr)
     for mode, r in res.items():
         served = f"{r['served']}/{r['expected']}"
-        print(f"{mode:10s}: {r['tokens']:5d} tokens in {r['seconds']:6.2f}s "
-              f"({r['tok_s']:7.1f} tok/s, served {served})")
+        print(f"{mode:15s} {r['tok_s']:8.1f} {served:>8s} "
+              f"{r['prefill_tok_per_admission']:18.1f} "
+              f"{r['jit_compiles']:13d}")
         ok &= r["served"] == r["expected"]
     speedup = res["continuous"]["tok_s"] / res["static"]["tok_s"]
-    print(f"continuous vs static: {speedup:.2f}x")
+    vs_legacy = (res["continuous"]["tok_s"]
+                 / res["cont-reprefill"]["tok_s"])
+    print(f"continuous vs static: {speedup:.2f}x; "
+          f"per-slot vs re-prefill admission: {vs_legacy:.2f}x")
+    artifact = {
+        "config": {k: v for k, v in vars(args).items() if k != "out"},
+        "results": res,
+        "continuous_vs_static": speedup,
+        "per_slot_vs_reprefill": vs_legacy,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"wrote {args.out}")
     if not ok:
         print("FAIL: not every request was served", file=sys.stderr)
         sys.exit(1)

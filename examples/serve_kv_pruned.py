@@ -1,31 +1,68 @@
 """Serving with dynamic KV-cache pruning — the paper's token scoring
-adapted to autoregressive decode (beyond-paper extension, DESIGN.md §5).
+adapted to autoregressive decode (beyond-paper extension, DESIGN.md §5) —
+on the layered serving API (Scheduler / KVCacheManager / ModelRunner
+composed by ServeEngine).
 
-Serves the same batch twice (full cache vs 50% pruned cache) and reports
-agreement of the generated tokens plus the cache-size saving.
+Serves the same skewed batch twice through the continuous per-slot path
+(full cache vs 50% pruned cache) and reports agreement of the generated
+tokens, the cache-size saving, and the admission cost the layered redesign
+bounds: tokens prefilled per admission (one bucketed prompt, independent
+of slot occupancy) and jit compiles (one per prefix-length bucket).
 
 Run: PYTHONPATH=src python examples/serve_kv_pruned.py
 """
+import jax
 import numpy as np
 
-from repro.launch.serve import serve
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving import EngineConfig, Request, ServeEngine
+
+
+def make_requests(cfg, seed=0, num=4):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(12, 25)),
+                                        dtype=np.int32),
+                    max_new_tokens=12)
+            for i in range(num)]
+
+
+def serve_once(cfg, params, kv_prune: float):
+    ec = EngineConfig(max_batch=2, max_len=64,
+                      kv_prune_interval=4 if kv_prune < 1.0 else 0,
+                      kv_prune_keep=kv_prune)
+    engine = ServeEngine(cfg, params, ec)
+    out = engine.serve(make_requests(cfg), continuous=True)
+    return out, engine
 
 
 def main():
-    kw = dict(arch="qwen3-14b", num_requests=4, prompt_len=24, max_new=12)
-    full = serve(**kw, kv_prune=1.0)
-    pruned = serve(**kw, kv_prune=0.5)
+    cfg = get_config("qwen3-14b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    full, eng_full = serve_once(cfg, params, kv_prune=1.0)
+    pruned, eng_pruned = serve_once(cfg, params, kv_prune=0.5)
 
     agree = total = 0
-    for uid in full["outputs"]:
-        a, b = full["outputs"][uid], pruned["outputs"][uid]
+    for uid in full:
+        a, b = full[uid], pruned[uid]
         agree += sum(x == y for x, y in zip(a, b))
         total += len(a)
-    print(f"full cache    : {full['tokens_per_s']:.1f} tok/s")
-    print(f"pruned (50%)  : {pruned['tokens_per_s']:.1f} tok/s")
+    st = eng_pruned.stats()
     print(f"token agreement under 50% KV pruning: {agree}/{total} "
           f"({agree/total:.0%}) — high-mass tokens carry the prediction")
-    print("cache memory: 0.5x of full (by construction)")
+    print(f"cache memory: 0.5x of full (by construction; "
+          f"{st['prune_events']} prune compactions fired)")
+    print(f"admission cost: {st['prefill_tokens_per_admission']:.1f} "
+          f"prefilled tokens per admission over {st['admissions']} "
+          f"admissions into {eng_pruned.ec.max_batch} slots")
+    print(f"jit compiles: {st['jit_compile_count']} "
+          f"(bounded by prefix-length buckets, shapes: "
+          f"{eng_pruned.runner.compiled_shapes()})")
+    # the three layers are independently inspectable:
+    print(f"scheduler events: {eng_pruned.scheduler.events[:4]}... "
+          f"({len(eng_pruned.scheduler.events)} total)")
 
 
 if __name__ == "__main__":

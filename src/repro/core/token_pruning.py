@@ -94,11 +94,12 @@ def kv_prune_scores(accum_attn: jax.Array, cache_len,
                     start=None) -> jax.Array:
     """``accum_attn [B, N_cache]`` is attention mass accumulated over decode
     steps and heads. Returns the same scores, masked to the valid cache
-    window ``[start, cache_len)`` — ``start`` (scalar or per-slot ``[B]``)
-    masks left-padding so pad slots never compete with real tokens."""
+    window ``[start, cache_len)`` — both ``cache_len`` and ``start`` may be
+    scalar or per-slot ``[B]``; ``start`` masks left-padding so pad slots
+    never compete with real tokens."""
     n = accum_attn.shape[-1]
     pos = jnp.arange(n)
-    valid = pos < cache_len
+    valid = pos < jnp.asarray(cache_len)[..., None]
     if start is not None:
         valid = valid & (pos >= jnp.asarray(start)[..., None])
     return jnp.where(valid, accum_attn, -jnp.inf)

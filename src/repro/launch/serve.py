@@ -1,9 +1,12 @@
-"""Serving launcher: batched requests through the ServeEngine.
+"""Serving launcher: batched requests through the layered serving API
+(Scheduler / KVCacheManager / ModelRunner composed by ServeEngine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \\
         --requests 8 --max-new 16 --kv-prune 0.5
 
-``--continuous`` serves through the slot-based continuous-batching path;
+``--continuous`` serves through the slot-based continuous-batching path
+(admission prefills only the admitted prompt via per-slot cache writes);
+``--no-slot-prefill`` forces the PR-2 whole-batch re-prefill for A/B runs.
 ``--elastic-drop N`` additionally simulates losing half the devices after
 ``N`` engine steps, exercising the degradation_path replan + re-shard
 (meaningful with >1 device, e.g. under
@@ -55,7 +58,7 @@ def simulated_loss_context(params, drop_after: int,
 def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
           max_new: int = 16, kv_prune: float = 1.0, reduced: bool = True,
           max_batch: int = 4, seed: int = 0, continuous: bool = False,
-          elastic_drop: int = 0):
+          elastic_drop: int = 0, per_slot_prefill: bool = True):
     if elastic_drop and not continuous:
         raise ValueError("--elastic-drop requires --continuous: only the "
                          "slot path probes device_count() between steps")
@@ -67,7 +70,8 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
         max_batch=max_batch,
         max_len=prompt_len + 2 * max_new + 8,
         kv_prune_interval=4 if kv_prune < 1.0 else 0,
-        kv_prune_keep=kv_prune)
+        kv_prune_keep=kv_prune,
+        per_slot_prefill=per_slot_prefill)
     rng = np.random.default_rng(seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, prompt_len,
@@ -79,12 +83,13 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
                    if elastic_drop else None)
         engine = ServeEngine(cfg, params, ec, elastic=elastic)
         t0 = time.time()
-        out = engine.run_continuous(reqs) if continuous else engine.run(reqs)
+        out = engine.serve(reqs, continuous=continuous)
         dt = time.time() - t0
     total_tokens = sum(len(v) for v in out.values())
     return {"outputs": out, "seconds": dt,
             "tokens_per_s": total_tokens / dt,
-            "events": list(engine.events)}
+            "events": list(engine.events),
+            "stats": engine.stats()}
 
 
 def main():
@@ -98,6 +103,8 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--continuous", action="store_true",
                     help="serve through the slot-based continuous path")
+    ap.add_argument("--no-slot-prefill", action="store_true",
+                    help="force PR-2 whole-batch re-prefill on admission")
     ap.add_argument("--elastic-drop", type=int, default=0, metavar="N",
                     help="simulate losing half the devices after N steps")
     ap.add_argument("--json", action="store_true",
@@ -105,15 +112,22 @@ def main():
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.prompt_len, args.max_new,
                 args.kv_prune, args.reduced, max_batch=args.max_batch,
-                continuous=args.continuous, elastic_drop=args.elastic_drop)
+                continuous=args.continuous, elastic_drop=args.elastic_drop,
+                per_slot_prefill=not args.no_slot_prefill)
     if args.json:
         print(json.dumps({
             "outputs": {str(k): v for k, v in out["outputs"].items()},
             "tokens_per_s": out["tokens_per_s"],
-            "events": out["events"]}))
+            "events": out["events"],
+            "stats": out["stats"]}))
         return
+    st = out["stats"]
     print(f"served {args.requests} requests in {out['seconds']:.2f}s "
           f"({out['tokens_per_s']:.1f} tok/s)")
+    print(f"  admissions: {st['admissions']}, prefilled "
+          f"{st['prefill_tokens_per_admission']:.1f} tok/admission, "
+          f"{st['jit_compile_count']} jit compiles, "
+          f"{st['prune_events']} KV prunes")
     for uid, toks in sorted(out["outputs"].items()):
         print(f"  req {uid}: {toks[:8]}{'...' if len(toks) > 8 else ''}")
     for ev in out["events"]:

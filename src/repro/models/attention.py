@@ -42,7 +42,7 @@ def unroll_mode(on: bool = True):
 class KVCache(NamedTuple):
     k: jax.Array          # [B, S_max, KV, Dh]
     v: jax.Array          # [B, S_max, KV, Dh]
-    length: jax.Array     # [] int32 — tokens currently valid
+    length: jax.Array     # [B] int32 — tokens currently valid, PER SLOT
     # beyond-paper dynamic KV pruning: attention mass accumulated per slot
     attn_mass: jax.Array  # [B, S_max] float32
 
@@ -52,7 +52,7 @@ def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
     return KVCache(
         k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
         v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
         attn_mass=jnp.zeros((batch, max_len), jnp.float32),
     )
 
@@ -88,10 +88,11 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
     """Grouped-query chunked attention.
 
     q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]; Hq = G·KV groups.
-    ``q_offset`` is the absolute position of q[0] (decode). ``kv_len`` masks
-    cache slots >= kv_len; ``kv_start`` ([B] int32) masks slots < kv_start
-    per batch row (left-padded prompts / compacted-cache garbage prefixes).
-    Returns [B, Nq, Hq, Dh] in q.dtype.
+    ``q_offset`` is the cache-slot index of q[0] (decode); scalar or per-row
+    ``[B]`` (per-slot serving, where every row decodes at its own length).
+    ``kv_len`` (scalar or ``[B]``) masks cache slots >= kv_len; ``kv_start``
+    ([B] int32) masks slots < kv_start per batch row (left-padded prompts /
+    compacted-cache garbage prefixes). Returns [B, Nq, Hq, Dh] in q.dtype.
     """
     B, Nq, Hq, Dh = q.shape
     _, Nk, KV, _ = k.shape
@@ -131,21 +132,25 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
     q_pos_base = jnp.asarray(q_offset, jnp.int32)
 
     def per_q_chunk(qi, qc_data):
-        q_pos = q_pos_base + qi * q_chunk + jnp.arange(q_chunk)
+        # q_pos: [qc] (scalar offset) or [B, qc] (per-row offsets)
+        q_pos = q_pos_base[..., None] + qi * q_chunk + jnp.arange(q_chunk)
 
         def body(carry, kc_pack):
             o, m, l = carry
             ki, kc_data, vc_data = kc_pack
             k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            # mask broadcasts over [(B,) qc, kc]: any of q_offset / kv_len /
+            # kv_start may be per-row [B] (per-slot serving) or scalar
             mask = jnp.ones((q_chunk, k_chunk), bool)
             if causal:
-                mask &= q_pos[:, None] >= k_pos[None, :]
+                mask = mask & (q_pos[..., :, None] >= k_pos)
             if kv_len is not None:
-                mask &= (k_pos < kv_len)[None, :]
+                lrow = k_pos < jnp.asarray(kv_len, jnp.int32)[..., None]
+                mask = mask & (lrow if lrow.ndim == 1 else lrow[:, None, :])
             if kv_start is not None:
-                # per-batch mask: [qc, kc] -> [B, 1(g), 1(h), qc, kc]
-                row = k_pos[None, :] >= kv_start[:, None]  # [B, kc]
-                mask = mask[None] & row[:, None, :]
+                srow = k_pos >= jnp.asarray(kv_start, jnp.int32)[..., None]
+                mask = mask & (srow if srow.ndim == 1 else srow[:, None, :])
+            if mask.ndim == 3:  # per-row: [B, qc, kc] -> [B, 1(g), 1(h), ...]
                 mask = mask[:, None, None]
             s = jnp.einsum("bghqd,bgkd->bghqk", qc_data.astype(jnp.float32),
                            kc_data.astype(jnp.float32)) * scale
@@ -192,7 +197,8 @@ def attention_probs_row(q_row: jax.Array, k: jax.Array,
     exactly what the TDM scoring needs (CLS row for ViT, last row for LM
     prefill) without materializing the full ``A`` matrix.
 
-    q_row: [B, Hq, Dh]; k: [B, Nk, KV, Dh]. ``kv_start`` ([B]) masks cache
+    q_row: [B, Hq, Dh]; k: [B, Nk, KV, Dh]. ``kv_len`` (scalar or per-row
+    ``[B]``) masks cache slots >= kv_len; ``kv_start`` ([B]) masks cache
     slots < kv_start per batch row so left-padding accumulates zero
     attention mass. Returns probs [B, Hq, Nk].
     """
@@ -205,7 +211,8 @@ def attention_probs_row(q_row: jax.Array, k: jax.Array,
     s = jnp.einsum("bgpd,bkgd->bgpk", qg, k.astype(jnp.float32)) * scale
     pos = jnp.arange(Nk)
     if kv_len is not None:
-        s = jnp.where((pos < kv_len)[None, None, None, :], s, NEG_INF)
+        lrow = pos[None, :] < jnp.reshape(jnp.asarray(kv_len), (-1, 1))
+        s = jnp.where(lrow[:, None, None, :], s, NEG_INF)  # [B|1, 1, 1, Nk]
     if kv_start is not None:
         row = pos[None, :] >= kv_start[:, None]  # [B, Nk]
         s = jnp.where(row[:, None, None, :], s, NEG_INF)
@@ -234,7 +241,13 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
     * ``valid_start`` ([B] int32): first real position per batch row —
       earlier slots (left-padded prompts, compacted-cache garbage prefixes)
       are masked out of the attention and of the ``attn_mass`` accumulation
-      that drives dynamic KV pruning.
+      that drives dynamic KV pruning. RoPE positions for masked rows count
+      *real* tokens (cache slot − valid_start), so a row's rotary phases are
+      independent of where its tokens sit in the cache buffer — per-slot
+      prefill and left-padded batch prefill rope identically.
+
+    ``cache.length`` is per-slot (``[B]``): each row reads/writes the cache
+    at its own length, so one slot can be prefilled while others decode.
     """
     B, N, D = x.shape
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -258,11 +271,17 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
         if kv_override is None:
             k = rms_norm(k, p["k_norm"], cfg.norm_eps)
 
+    # per-slot write offsets: [B] cache-slot index of this call's first token
+    slot_off = None
+    if cache is not None and kv_override is None:
+        slot_off = jnp.broadcast_to(jnp.asarray(cache.length, jnp.int32), (B,))
     if positions is None:
-        offset = cache.length if cache is not None else 0
-        positions = offset + jnp.arange(N)
-        if positions.ndim == 1:
-            positions = jnp.broadcast_to(positions, (B, N))
+        if slot_off is not None:
+            base = (slot_off - valid_start) if valid_start is not None \
+                else slot_off  # rope counts real tokens, not buffer slots
+            positions = base[:, None] + jnp.arange(N)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(N), (B, N))
     if use_rope and kv_override is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -270,14 +289,14 @@ def attention_block(x: jax.Array, p, cfg, *, causal: bool,
     new_cache = None
     tdm_scores = None
     if cache is not None and kv_override is None:
-        # write new k/v at [length, length+N)
-        k_all = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
-        new_len = cache.length + N
+        # write new k/v at each row's own [length_b, length_b + N)
+        put_row = lambda dst, src, start: jax.lax.dynamic_update_slice(
+            dst, src, (start, 0, 0))
+        k_all = jax.vmap(put_row)(cache.k, k.astype(cache.k.dtype), slot_off)
+        v_all = jax.vmap(put_row)(cache.v, v.astype(cache.v.dtype), slot_off)
+        new_len = slot_off + N
         out = flash_attention_jnp(
-            q, k_all, v_all, causal=causal, q_offset=cache.length,
+            q, k_all, v_all, causal=causal, q_offset=slot_off,
             kv_len=new_len, kv_start=valid_start,
             q_chunk=min(512, N), k_chunk=min(512, k_all.shape[1]))
         # accumulate attention mass for dynamic KV pruning (decode only)

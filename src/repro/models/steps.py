@@ -191,6 +191,84 @@ def make_prefill(cfg: ModelConfig, unroll: bool = False):
     return prefill
 
 
+# Families whose serve state is pure KV cache — left-padding can be masked
+# exactly via valid_start. Recurrent families (ssm, hybrid mamba states)
+# absorb pad tokens into state, so they serve without the masking.
+MASKABLE_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+# Families whose serve state is purely stacked KV caches — a single slot can
+# be prefilled in isolation and scattered into the live batch. Recurrent
+# state (ssm/hybrid) and encoder-coupled caches (audio/vlm) need the full
+# batch present, so their engines fall back to whole-batch re-prefill.
+SLOT_PREFILL_FAMILIES = ("dense", "moe")
+
+
+def _blank_row_caches(caches: Any) -> Any:
+    """A zeroed B=1 copy of a stacked serve-cache pytree (KVCache leaves
+    only). Batch axes follow the KVCache layout: k/v [..., B, S, KV, Dh],
+    attn_mass [..., B, S], length [..., B]."""
+    def one(c):
+        if not isinstance(c, A.KVCache):
+            raise TypeError(
+                "per-slot prefill needs a pure KV-cache tree; got leaf "
+                f"{type(c).__name__} (recurrent/encoder state — use the "
+                "whole-batch prefill path)")
+        row1 = lambda a, ax: jnp.zeros(
+            a.shape[:ax] + (1,) + a.shape[ax + 1:], a.dtype)
+        return A.KVCache(row1(c.k, c.k.ndim - 4), row1(c.v, c.v.ndim - 4),
+                         row1(c.length, c.length.ndim - 1),
+                         row1(c.attn_mass, c.attn_mass.ndim - 2))
+    is_kv = lambda x: isinstance(x, A.KVCache)
+    return jax.tree.map(one, caches, is_leaf=is_kv)
+
+
+def _scatter_row_caches(live: Any, row: Any, slot) -> Any:
+    """Write the B=1 cache pytree ``row`` into batch row ``slot`` of
+    ``live`` (slot may be traced — one jit compile covers every slot)."""
+    def put(dst, src, batch_axis):
+        starts = [jnp.int32(0)] * dst.ndim
+        starts[batch_axis] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), tuple(starts))
+
+    def one(dst, src):
+        return A.KVCache(put(dst.k, src.k, dst.k.ndim - 4),
+                         put(dst.v, src.v, dst.v.ndim - 4),
+                         put(dst.length, src.length, dst.length.ndim - 1),
+                         put(dst.attn_mass, src.attn_mass,
+                             dst.attn_mass.ndim - 2))
+    is_kv = lambda x: isinstance(x, A.KVCache)
+    return jax.tree.map(one, live, row, is_leaf=is_kv)
+
+
+def make_prefill_slot(cfg: ModelConfig, unroll: bool = False):
+    """Prefill ONE admitted prompt into one slot of the live batched cache.
+
+    Returns ``prefill_slot(params, batch, caches, slot) ->
+    (next_token [1], caches)``: ``batch["tokens"]`` is a single
+    (bucket-padded) prompt row ``[1, Lb]`` with ``batch["valid_start"]``
+    ``[1]`` marking its left padding. The prompt runs through a B=1 prefill
+    against a blank cache row, which is then scattered into batch row
+    ``slot`` of ``caches`` — admission costs one prompt's FLOPs instead of
+    a whole-batch re-prefill, and ``slot`` stays traced so jit compiles
+    once per bucketed prefix length, not per slot.
+    """
+    if cfg.family not in SLOT_PREFILL_FAMILIES:
+        raise ValueError(
+            f"per-slot prefill unsupported for family '{cfg.family}' "
+            f"(supported: {SLOT_PREFILL_FAMILIES}); serve this family "
+            "through the whole-batch prefill path")
+
+    def prefill_slot(params, batch, caches, slot):
+        row = _blank_row_caches(caches)
+        out = M.forward_lm(cfg, params, batch["tokens"], mode="prefill",
+                           caches=row, logits_for="last", unroll=unroll,
+                           valid_start=batch.get("valid_start"))
+        next_tok = jnp.argmax(out.logits[:, -1], axis=-1)  # [1]
+        return next_tok, _scatter_row_caches(caches, out.caches, slot)
+    return prefill_slot
+
+
 def make_decode_step(cfg: ModelConfig, unroll: bool = False):
     """One token in, one token out, caches updated in place."""
     def decode(params, token, caches, vision_embeds=None, valid_start=None):

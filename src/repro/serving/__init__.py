@@ -1,5 +1,16 @@
-from repro.serving.engine import (ServeEngine, EngineConfig, ElasticContext,
-                                  Request, prune_kv_caches)
+"""Layered serving API.
+
+``Scheduler`` (admission policy) / ``KVCacheManager`` (per-slot cache
+state) / ``ModelRunner`` (jitted steps + compile cache) compose into
+``ServeEngine``; ``prune_kv_caches`` is the standalone KV compaction.
+"""
+from repro.serving.cache_manager import (KVCacheManager, bucket_length,
+                                         prune_kv_caches)
+from repro.serving.engine import (ElasticContext, EngineConfig, Request,
+                                  ServeEngine)
+from repro.serving.runner import ModelRunner, build_padded_batch
+from repro.serving.scheduler import Scheduler
 
 __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
-           "prune_kv_caches"]
+           "Scheduler", "KVCacheManager", "ModelRunner", "prune_kv_caches",
+           "bucket_length", "build_padded_batch"]

@@ -1,0 +1,243 @@
+"""KVCacheManager — owns per-slot serve-cache state and its lifecycle.
+
+One of the three serving layers (Scheduler / KVCacheManager / ModelRunner —
+see ``repro.serving.engine``). The manager holds the live device cache
+pytree plus host mirrors of each slot's ``length`` (cache-buffer write
+position) and ``valid_start`` (first real entry — everything before it is
+left-padding or compacted-cache garbage). It decides capacity (admission
+high-water checks, decode overflow) and runs the dynamic KV-prune cadence;
+it never runs model math — the ModelRunner produces the cache contents the
+manager accounts for.
+
+Admission granularity is a *prefix-length bucket*: ``admit(slot,
+prompt_len)`` rounds the prompt up to the next power-of-two bucket (capped
+at ``max_len``) so the jitted per-slot prefill compiles once per bucket,
+not once per prompt length.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import token_pruning as TP
+from repro.models import attention as A
+from repro.models import steps as ST
+
+
+def bucket_length(n: int, cap: int, lo: int = 8) -> int:
+    """Round ``n`` up to the next power-of-two bucket in [lo, cap]."""
+    b = max(int(lo), 1)
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class KVCacheManager:
+    """Per-slot cache bookkeeping for one engine's ``max_batch`` slots.
+
+    ``ec`` is an ``EngineConfig`` (duck-typed to avoid an import cycle with
+    ``engine.py``): max_batch / max_len / kv_prune_interval / kv_prune_keep
+    / prefill_bucket_min are read from it.
+    """
+
+    def __init__(self, cfg, ec):
+        self.cfg = cfg
+        self.ec = ec
+        self.masked = cfg.family in ST.MASKABLE_FAMILIES
+        self.caches: Any = None
+        B = ec.max_batch
+        self.lengths = np.zeros((B,), np.int64)   # mirrors device length
+        self.starts = np.zeros((B,), np.int32)    # mirrors valid_start
+        self.active = np.zeros((B,), bool)
+        self.steps_since_prune = 0
+        self.prune_events = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def reset(self) -> None:
+        """Fresh zeroed caches for all slots; prune cadence restarts."""
+        self.caches = ST.init_caches(self.cfg, self.ec.max_batch,
+                                     self.ec.max_len)
+        self.lengths[:] = 0
+        self.starts[:] = 0
+        self.active[:] = False
+        self.steps_since_prune = 0
+
+    def admit(self, slot: int, prompt_len: int,
+              max_new_tokens: int = 0) -> Tuple[int, int]:
+        """Account slot ``slot`` as holding a prompt of ``prompt_len`` real
+        tokens. Returns ``(bucket_len, valid_start)``: the bucketed row
+        width the runner must prefill at and the left-pad depth within it.
+        Raises up-front when the slot's own high-water mark cannot fit
+        (decidable only with KV pruning off)."""
+        ec = self.ec
+        if prompt_len > ec.max_len:
+            raise RuntimeError(
+                f"prompt of {prompt_len} tokens exceeds max_len={ec.max_len}")
+        lb = bucket_length(prompt_len, ec.max_len, ec.prefill_bucket_min)
+        # bucket padding must never turn a feasible request infeasible:
+        # when the padded row would consume the decode headroom, fall back
+        # to the largest bucket that fits — or the raw prompt length (costs
+        # at most one extra jit shape, and only for prompts within a
+        # bucket's padding of capacity)
+        if self.pruning_enabled:
+            # pruning bounds the cache dynamically, but only once it FIRES:
+            # leave room to decode until the first compaction can fire — up
+            # to (keep − prompt) steps growing to the keep target plus a
+            # full cadence interval before the tick lands
+            keep = max(1, min(int(ec.max_len * ec.kv_prune_keep),
+                              ec.max_len))
+            budget = ec.max_len - (max(0, keep - prompt_len)
+                                   + ec.kv_prune_interval)
+        else:
+            budget = ec.max_len - max(max_new_tokens - 1, 0)
+        if lb > budget:
+            b = 1
+            while b * 2 <= budget:
+                b *= 2
+            lb = b if b >= prompt_len else prompt_len
+        self.check_capacity(lb + max_new_tokens - 1)
+        start = lb - prompt_len
+        self.lengths[slot] = lb
+        self.starts[slot] = start
+        self.active[slot] = True
+        return lb, start
+
+    def free(self, slot: int) -> None:
+        """Slot retired; its device row is garbage until the next admit
+        overwrites it (decode keeps advancing it harmlessly — outputs of
+        inactive rows are never read)."""
+        self.active[slot] = False
+
+    def set_batch_state(self, lengths, starts) -> None:
+        """Adopt mirrors after a whole-batch (re-)prefill replaced every
+        row at once (fallback path: recurrent families, elastic rebuild)."""
+        self.lengths[:] = np.asarray(lengths)
+        self.starts[:] = np.asarray(starts) if starts is not None else 0
+        self.steps_since_prune = 0  # fresh caches, fresh cadence
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def pruning_enabled(self) -> bool:
+        return self.ec.kv_prune_interval > 0 and self.ec.kv_prune_keep < 1.0
+
+    def check_capacity(self, high_water: int) -> None:
+        """Reject up-front a workload whose cache high-water mark cannot
+        fit. Only decidable when KV pruning is off — pruning bounds the
+        cache dynamically, so pruned runs rely on ``on_decode``."""
+        if not self.pruning_enabled and high_water > self.ec.max_len:
+            raise RuntimeError(
+                f"max_len={self.ec.max_len} cannot hold {high_water} tokens "
+                "(prefix + remaining decode); raise EngineConfig.max_len")
+
+    def on_decode(self) -> None:
+        """Account one decode step: every row's write position advances by
+        one (the batched decode touches all rows). Raises before an active
+        slot would write past the cache buffer."""
+        over = self.active & (self.lengths >= self.ec.max_len)
+        if over.any():
+            slot = int(np.argmax(over))
+            raise RuntimeError(
+                f"KV cache overflow: decode step would write at "
+                f"{int(self.lengths[slot])} >= max_len={self.ec.max_len} "
+                f"(slot {slot})")
+        self.lengths += 1
+
+    def valid_starts(self) -> Optional[jax.Array]:
+        """Per-slot valid_start for the next device call (None when the
+        family cannot mask left-padding)."""
+        return jnp.asarray(self.starts) if self.masked else None
+
+    # -- dynamic KV pruning ------------------------------------------------
+    def maybe_prune(self) -> bool:
+        """Compact the caches when the cadence fires and they have outgrown
+        the keep target. Returns True when a prune ran."""
+        ec = self.ec
+        if not self.pruning_enabled:
+            return False
+        keep = max(1, min(int(ec.max_len * ec.kv_prune_keep), ec.max_len))
+        self.steps_since_prune += 1
+        # gauge growth by REAL tokens of ACTIVE slots (write position minus
+        # left-padding): buffer positions depend on bucket/padding geometry,
+        # and freed slots keep advancing with every batched decode — keying
+        # the cadence on either would make prune timing admission-path- or
+        # retirement-history-dependent instead of workload-dependent
+        act = self.active
+        n_real = (int((self.lengths[act] - self.starts[act]).max())
+                  if act.any() else 0)
+        if self.steps_since_prune < ec.kv_prune_interval or n_real < keep:
+            return False
+        self.steps_since_prune = 0
+        self.prune_events += 1
+        starts = self.valid_starts()
+        self.caches, new_starts = prune_kv_caches(
+            self.caches, ec.kv_prune_keep, starts=starts)
+        self.lengths[:] = keep
+        if self.masked and new_starts is not None:
+            self.starts[:] = np.asarray(new_starts)
+        return True
+
+
+def prune_kv_caches(caches: Any, keep_frac: float,
+                    starts: Optional[jax.Array] = None) -> Tuple[Any, Any]:
+    """Compact every KVCache to its top-``keep_frac`` attention-mass slots.
+
+    Stacked caches ([L, ...]) are handled with vmap. ``starts`` ([B] int32)
+    marks per-slot left-padding; pad slots score ``-inf`` and are never kept
+    ahead of real tokens. Kept entries are packed so each slot's valid
+    window ends at ``keep``: when a slot has fewer than ``keep`` valid
+    entries, the (zeroed) garbage sits at the *front*, which the returned
+    ``new_starts`` ([B] int32) masks — the compacted cache is left-padded
+    exactly like the prompts were. ``length`` becomes ``min(length, keep)``
+    per slot and attention mass resets (so the ranking adapts as decoding
+    proceeds).
+
+    Returns ``(pruned_caches, new_starts)``.
+    """
+    def one(c):
+        if not isinstance(c, A.KVCache):
+            return c  # recurrent state (ssm/mamba) passes through untouched
+
+        def single(k, v, length, mass):
+            n = k.shape[1]
+            keep = max(1, min(int(n * keep_frac), n))
+            scores = TP.kv_prune_scores(mass, length, start=starts)
+            idx = TP.select_kv_keep(scores, keep, invalid_first=True)
+            k2, v2 = TP.compact_kv_cache(k, v, idx)
+            # zero the invalid (garbage) prefix each slot may carry
+            n_valid = jnp.clip(
+                length - (starts if starts is not None else 0), 0, keep)
+            pos = jnp.arange(keep)
+            valid = pos[None, :] >= (keep - n_valid)[..., None]
+            k2 = jnp.where(valid[..., None, None], k2, 0)
+            v2 = jnp.where(valid[..., None, None], v2, 0)
+            k_new = jnp.zeros_like(k).at[:, :keep].set(k2)
+            v_new = jnp.zeros_like(v).at[:, :keep].set(v2)
+            new_len = jnp.full_like(length, keep)
+            new_mass = jnp.zeros_like(mass)
+            return A.KVCache(k_new, v_new, new_len, new_mass)
+
+        if c.k.ndim == 5:  # stacked [L, B, S, KV, Dh]
+            return jax.vmap(single)(c.k, c.v, c.length, c.attn_mass)
+        return single(c.k, c.v, c.length, c.attn_mass)
+
+    is_kv = lambda x: isinstance(x, A.KVCache)
+    pruned = jax.tree.map(one, caches, is_leaf=is_kv)
+    kv_leaves = [l for l in jax.tree_util.tree_leaves(caches, is_leaf=is_kv)
+                 if isinstance(l, A.KVCache)]
+    if not kv_leaves:  # pure recurrent state: nothing compacted
+        return pruned, starts
+    # analytic per-slot garbage prefix — identical for every layer because
+    # it depends only on length/starts/keep, not the per-layer attn mass
+    first = kv_leaves[0]
+    n = first.k.shape[-3]
+    keep = max(1, min(int(n * keep_frac), n))
+    base = (starts if starts is not None
+            else jnp.zeros((first.k.shape[-4],), jnp.int32))
+    # per-slot lengths are uniform across layers — take the first layer's
+    lens = first.length.reshape(-1, first.length.shape[-1])[0]
+    n_valid = jnp.clip(lens - base, 0, keep)
+    new_starts = (keep - n_valid).astype(jnp.int32)
+    return pruned, new_starts

@@ -1,58 +1,78 @@
-"""Batched serving engine: static-wave and continuous (slot-based) batching
-over shared jitted prefill/decode steps, with beyond-paper dynamic KV-cache
-pruning and elastic degradation on device loss.
+"""ServeEngine — thin composition of the three serving layers.
+
+Layers (each separately constructible and testable):
+
+* ``Scheduler``      (``repro.serving.scheduler``) — admission/retirement
+  policy over waiting + in-flight requests. FIFO by default,
+  policy-pluggable. Owns the unified event stream: both serve paths emit
+  the same ``("admit", uid)`` / ``("retire", uid)`` / ``("degrade", desc)``
+  events through it.
+* ``KVCacheManager`` (``repro.serving.cache_manager``) — owns per-slot
+  cache state: the live device cache pytree, per-slot ``length`` /
+  ``valid_start`` mirrors, prefix-length bucketing, capacity accounting
+  (admission high-water checks + decode overflow), and the dynamic
+  KV-prune cadence (``admit`` / ``free`` / ``maybe_prune``).
+* ``ModelRunner``    (``repro.serving.runner``) — owns the jitted steps
+  (whole-batch prefill, per-slot prefill, decode) behind a compile cache;
+  recompiles are observable via ``runner.compile_count``.
 
 Serve paths
 -----------
-* ``run``            — static waves: up to ``max_batch`` requests prefill
-  together and decode in lockstep until the longest request finishes.
-* ``run_continuous`` — continuous batching: ``max_batch`` fixed decode
-  slots; waiting requests are admitted into slots as earlier requests
-  finish (``Request.done``). Admission re-prefills the active prefixes
-  (left-padded to a common length) so every jitted call keeps a static
-  batch shape; slots then decode together until the next admission.
+* ``serve(requests)`` / ``run``          — static waves: up to
+  ``max_batch`` requests prefill together and decode in lockstep until the
+  longest request finishes.
+* ``serve(requests, continuous=True)`` / ``run_continuous`` — continuous
+  batching with ``max_batch`` fixed decode slots. Admission prefills ONLY
+  the admitted prompt: ``ModelRunner.prefill_slot`` runs a B=1 prefill of
+  the (bucket-padded) prompt and scatters the row into the admitted slot
+  of the live batched cache, so admission cost is one prompt — independent
+  of how many slots are active — and prefix-length bucketing bounds jit
+  recompiles to one per bucket. Families whose serve state is not pure KV
+  cache (recurrent ssm/hybrid) fall back to the PR-2 whole-batch
+  re-prefill.
 
-Left-padding is masked wherever it matters: the per-slot ``valid_start``
-(index of the first real token) is threaded through prefill/decode
-attention masks and the KV ``attn_mass`` accumulation, so pad slots never
-compete with real tokens — neither in attention nor in KV-cache pruning.
+Per-slot cache geometry: every ``KVCache.length`` is ``[B]`` — each row
+reads/writes at its own position, and RoPE phases count *real* tokens
+(cache slot − ``valid_start``), which makes per-slot prefill bit-exact
+against whole-batch left-padded prefill. Left-padding is masked wherever it
+matters: attention and the KV ``attn_mass`` accumulation both exclude
+positions before ``valid_start``, so pad slots never compete with real
+tokens — neither in attention nor in KV-cache pruning.
 
 KV pruning is the paper's token-scoring adapted to autoregressive decode:
 attention mass accumulated per cached token ranks cache entries; every
-``kv_prune_interval`` steps the engine compacts each layer's cache to the
-top ``kv_prune_keep`` fraction (skipped while the cache is still shorter
-than the target — there is nothing to prune). This bounds decode memory
-*and* the per-step attention read — the decode-shape memory roofline term
-scales by ``kv_prune_keep``.
+``kv_prune_interval`` steps the KVCacheManager compacts each layer's cache
+to the top ``kv_prune_keep`` fraction. This bounds decode memory *and* the
+per-step attention read.
 
 Elastic degradation (ROADMAP repro.dist): construct the engine with an
-``ElasticContext`` and ``run_continuous`` probes ``device_count()`` every
+``ElasticContext`` and the continuous path probes ``device_count()`` every
 step. On device loss it walks ``dist.elastic.degradation_path`` to the
-first plan that fits, rebuilds the mesh, re-shards the weights via
-``CheckpointManager.restore(..., shardings=...)``, and keeps serving at
-the reduced data-parallel width — in-flight requests are re-prefilled on
-the new mesh, no request is dropped.
+first plan that fits, re-shards the weights via
+``CheckpointManager.restore(..., shardings=...)``, emits a ``degrade``
+event through the Scheduler, and tells the KVCacheManager to rebuild —
+in-flight requests are re-prefilled on the new mesh, no request is
+dropped.
+
+``run`` and ``run_continuous`` are kept as compatibility wrappers over
+``serve`` (same signatures, identical outputs); new code should construct
+the layers through ``ServeEngine`` and call ``serve``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import token_pruning as TP
 from repro.dist.elastic import MeshPlan, degradation_path, first_fit
-from repro.models import attention as A
-from repro.models import steps as ST
+from repro.serving.cache_manager import KVCacheManager, prune_kv_caches
+from repro.serving.runner import ModelRunner, build_padded_batch
+from repro.serving.scheduler import Scheduler
 
-# Families whose serve state is pure KV cache — left-padding can be masked
-# exactly. Recurrent families (ssm, hybrid mamba states) absorb pad tokens
-# into state, so the engine serves them without the valid_start masking
-# (pre-existing behavior; see forward_lm docstring).
-_MASKABLE = ("dense", "moe", "vlm", "audio")
+__all__ = ["Request", "EngineConfig", "ElasticContext", "ServeEngine",
+           "prune_kv_caches"]
 
 
 @dataclasses.dataclass
@@ -70,11 +90,38 @@ class EngineConfig:
     max_len: int = 512
     kv_prune_interval: int = 0   # 0 = off
     kv_prune_keep: float = 1.0
+    per_slot_prefill: bool = True   # False: PR-2 whole-batch re-prefill
+    prefill_bucket_min: int = 8     # smallest prefix-length bucket
+
+    def __post_init__(self):
+        if self.max_batch <= 0:
+            raise ValueError(
+                f"EngineConfig.max_batch must be a positive slot count, "
+                f"got {self.max_batch}")
+        if self.max_len <= 0:
+            raise ValueError(
+                f"EngineConfig.max_len must be a positive cache capacity "
+                f"(tokens), got {self.max_len}")
+        if not (0.0 < self.kv_prune_keep <= 1.0):
+            raise ValueError(
+                f"EngineConfig.kv_prune_keep must be in (0, 1] — the "
+                f"fraction of cache entries kept per prune — got "
+                f"{self.kv_prune_keep}")
+        if self.kv_prune_interval < 0:
+            raise ValueError(
+                f"EngineConfig.kv_prune_interval must be >= 0 (decode "
+                f"steps between prunes; 0 disables pruning), got "
+                f"{self.kv_prune_interval}")
+        if self.prefill_bucket_min <= 0:
+            raise ValueError(
+                f"EngineConfig.prefill_bucket_min must be a positive "
+                f"bucket width, got {self.prefill_bucket_min}")
 
 
 @dataclasses.dataclass
 class ElasticContext:
-    """Everything ``run_continuous`` needs to survive simulated device loss.
+    """Everything the continuous path needs to survive simulated device
+    loss.
 
     ``manager`` must hold a checkpoint of the engine's params (saved by the
     launcher before serving starts); ``device_count`` is the live-capacity
@@ -89,185 +136,239 @@ class ElasticContext:
 
 class ServeEngine:
     """Single-host reference engine (the multi-pod serve path lowers the
-    same prefill/decode step functions through launch/serve.py)."""
+    same step functions through launch/serve.py). Construction wires the
+    three layers; they are exposed as ``.scheduler`` / ``.cache`` /
+    ``.runner`` for tests, policies, and telemetry."""
 
     def __init__(self, cfg: ModelConfig, params: Any, ec: EngineConfig,
-                 elastic: Optional[ElasticContext] = None):
+                 elastic: Optional[ElasticContext] = None,
+                 policy: "str | Callable" = "fifo"):
         self.cfg = cfg
-        self.params = params
         self.ec = ec
         self.elastic = elastic
-        self.prefill = jax.jit(ST.make_prefill(cfg))
-        self.decode = jax.jit(ST.make_decode_step(cfg))
-        self.steps_since_prune = 0
-        self._masked = cfg.family in _MASKABLE
+        self.runner = ModelRunner(cfg, params)
+        self.cache = KVCacheManager(cfg, ec)
+        self.scheduler = Scheduler(ec.max_batch, policy=policy)
         self._plan = elastic.plan if elastic is not None else None
-        self.events: List[Tuple[str, Any]] = []
-        self.prune_events = 0
+        # padded tokens run through prefill at admissions (and rebuilds)
+        self.admission_prefill_tokens = 0
 
-    # ------------------------------------------------------------------
-    # Static-wave path
-    # ------------------------------------------------------------------
+    # -- compatibility surface (PR-2 attribute names) ----------------------
+    @property
+    def params(self):
+        return self.runner.params
+
+    @params.setter
+    def params(self, value):
+        self.runner.params = value
+
+    @property
+    def events(self) -> List[Tuple[str, Any]]:
+        return self.scheduler.events
+
+    @property
+    def prune_events(self) -> int:
+        return self.cache.prune_events
+
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve a list of requests with static batching per wave."""
-        out: Dict[int, List[int]] = {}
-        for wave_start in range(0, len(requests), self.ec.max_batch):
-            wave = requests[wave_start: wave_start + self.ec.max_batch]
-            out.update(self._run_wave(wave))
-        return out
+        """Deprecated alias for ``serve(requests)`` (static waves)."""
+        return self.serve(requests, continuous=False)
 
-    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
-        max_new = max(r.max_new_tokens for r in wave)
-        S = max(len(r.prompt) for r in wave)
-        self._check_capacity(S + max_new - 1)
-        tok, caches, starts, cur_len = self._prefill_batch(
-            [np.asarray(r.prompt, np.int32) for r in wave])
-        gen = [tok]
-        for _ in range(max_new - 1):
-            caches, starts, cur_len = self._maybe_prune_kv(
-                caches, starts, cur_len)
-            self._check_overflow(cur_len)
-            tok, caches = self.decode(self.params, tok[:, None], caches,
-                                      valid_start=starts)
-            cur_len += 1
-            gen.append(tok)
-        gen = np.stack([np.asarray(g) for g in gen], axis=1)  # [B, T]
-        out = {}
-        for i, r in enumerate(wave):
-            r.generated = gen[i, : r.max_new_tokens].tolist()
-            r.done = True
-            out[r.uid] = r.generated
-        return out
-
-    # ------------------------------------------------------------------
-    # Continuous-batching path
-    # ------------------------------------------------------------------
     def run_continuous(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve with ``max_batch`` decode slots and per-request admission.
+        """Deprecated alias for ``serve(requests, continuous=True)``."""
+        return self.serve(requests, continuous=True)
 
-        Requests wait in FIFO order; a slot frees as soon as its request
-        reaches ``max_new_tokens`` (``Request.done``). Admission and elastic
-        degradation both trigger a re-prefill of every active prefix, which
-        re-derives the same greedy continuation for in-flight requests
-        (prefill over a prefix is mathematically the decode that produced
-        it). Inactive slots carry a single dummy token and are masked via
-        ``valid_start``; their outputs are discarded.
-        """
-        ec = self.ec
-        pending: List[Request] = list(requests)
-        slots: List[Optional[Request]] = [None] * ec.max_batch
+    # -- public API --------------------------------------------------------
+    def serve(self, requests: List[Request],
+              continuous: bool = False) -> Dict[int, List[int]]:
+        if continuous:
+            return self._serve_continuous(requests)
         out: Dict[int, List[int]] = {}
-        tok = caches = starts = None
-        cur_len = 0
+        for ws in range(0, len(requests), self.ec.max_batch):
+            out.update(self._run_wave(requests[ws: ws + self.ec.max_batch]))
+        return out
 
-        while pending or any(r is not None for r in slots):
+    def stats(self) -> Dict[str, Any]:
+        adm = self.scheduler.num_admissions
+        return {
+            "admissions": adm,
+            "admission_prefill_tokens": self.admission_prefill_tokens,
+            "prefill_tokens_per_admission":
+                self.admission_prefill_tokens / adm if adm else 0.0,
+            "compile_count": self.runner.compile_count,
+            "jit_compile_count": self.runner.jit_compile_count(),
+            "prune_events": self.cache.prune_events,
+        }
+
+    # -- static-wave path --------------------------------------------------
+    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        max_new = max(r.max_new_tokens for r in wave)
+        sched.submit(wave)
+        admitted = sched.schedule()  # every slot free: the whole wave fits
+        toks = np.zeros((self.ec.max_batch,), np.int64)
+
+        if runner.supports_slot_prefill and self.ec.per_slot_prefill:
+            kvm.reset()  # the fallback path allocates inside its prefill
+            for slot, req in admitted:
+                lb, _ = kvm.admit(slot, len(req.prompt), max_new)
+                tok, kvm.caches = runner.prefill_slot(
+                    np.asarray(req.prompt, np.int32), kvm.caches, slot, lb)
+                toks[slot] = tok
+                self.admission_prefill_tokens += lb
+        else:
+            toks = self._prefill_whole_batch(max_new)
+
+        out: Dict[int, List[int]] = {}
+        self._append_and_retire(toks, sched.running.keys(), out)
+        while sched.running:
+            kvm.maybe_prune()
+            kvm.on_decode()
+            tok_dev, kvm.caches = runner.decode(toks, kvm.caches,
+                                                kvm.valid_starts())
+            toks = np.asarray(tok_dev).astype(np.int64)
+            self._append_and_retire(toks, sched.running.keys(), out)
+        return out
+
+    # -- continuous-batching path ------------------------------------------
+    def _serve_continuous(self, requests: List[Request]
+                          ) -> Dict[int, List[int]]:
+        """``max_batch`` decode slots with per-request admission. Each loop
+        iteration produces at most one token per slot: per-slot prefill for
+        slots admitted this iteration, or one batched decode step for the
+        slots already live (interleaving differs from PR-2's re-prefill
+        loop but per-request token sequences are identical — rows are
+        independent)."""
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        use_slot = runner.supports_slot_prefill and self.ec.per_slot_prefill
+        sched.submit(requests)
+        if use_slot:
+            kvm.reset()  # per-slot admissions write into live caches;
+            # the fallback's whole-batch prefill allocates its own
+        out: Dict[int, List[int]] = {}
+        toks = np.zeros((self.ec.max_batch,), np.int64)
+        rebuild = False  # caches must be rebuilt by a whole-batch prefill
+
+        while sched.has_work():
             if self.elastic is not None:
                 avail = self.elastic.device_count()
                 if avail < self._plan.num_devices:
                     self._degrade(avail)
-                    tok = None  # re-prefill on the degraded mesh
-            for i in range(ec.max_batch):
-                if slots[i] is None and pending:
-                    slots[i] = pending.pop(0)
-                    self.events.append(("admit", slots[i].uid))
-                    tok = None  # admission re-prefills the batch
-            if tok is None:
-                tok, caches, starts, cur_len = self._prefill_slots(slots)
+                    rebuild = True  # re-prefill on the degraded mesh
+            admitted = sched.schedule()
+            if rebuild or (admitted and not use_slot):
+                toks = (self._rebuild_per_slot() if use_slot
+                        else self._reprefill_active())
+                produced = set(sched.running.keys())
+                rebuild = False
+            elif admitted:
+                for slot, req in admitted:
+                    lb, _ = kvm.admit(slot, len(req.prompt),
+                                      req.max_new_tokens)
+                    tok, kvm.caches = runner.prefill_slot(
+                        np.asarray(req.prompt, np.int32), kvm.caches,
+                        slot, lb)
+                    toks[slot] = tok
+                    self.admission_prefill_tokens += lb
+                produced = {slot for slot, _ in admitted}
             else:
-                caches, starts, cur_len = self._maybe_prune_kv(
-                    caches, starts, cur_len)
-                self._check_overflow(cur_len)
-                tok, caches = self.decode(self.params, tok[:, None], caches,
-                                          valid_start=starts)
-                cur_len += 1
-            toks = np.asarray(tok)
-            for i, r in enumerate(slots):
-                if r is None:
-                    continue
-                r.generated.append(int(toks[i]))
-                if len(r.generated) >= r.max_new_tokens:
-                    r.done = True
-                    out[r.uid] = list(r.generated)
-                    slots[i] = None  # slot freed for the next admission
-                    self.events.append(("retire", r.uid))
+                kvm.maybe_prune()
+                kvm.on_decode()
+                tok_dev, kvm.caches = runner.decode(toks, kvm.caches,
+                                                    kvm.valid_starts())
+                toks = np.asarray(tok_dev).astype(np.int64)
+                produced = set(sched.running.keys())
+            self._append_and_retire(toks, produced, out)
         return out
 
-    def _prefill_slots(self, slots: List[Optional[Request]]):
-        """(Re-)prefill every active slot's full prefix (prompt + generated
-        so far), left-padded to a common length; inactive slots get a single
-        dummy token. Returns (next_token, caches, valid_start, cur_len)."""
-        prefixes: List[Optional[np.ndarray]] = []
-        for r in slots:
-            if r is None:
-                prefixes.append(None)
+    # -- shared helpers ----------------------------------------------------
+    def _append_and_retire(self, toks: np.ndarray, produced, out) -> None:
+        sched, kvm = self.scheduler, self.cache
+        for slot in sorted(produced):
+            req = sched.running.get(slot)
+            if req is None:
                 continue
-            p = np.asarray(r.prompt, np.int32)
-            if r.generated:
+            req.generated.append(int(toks[slot]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                out[req.uid] = list(req.generated)
+                sched.retire(slot)
+                kvm.free(slot)
+
+    def _prefill_whole_batch(self, max_new: int) -> np.ndarray:
+        """Wave-start whole-batch prefill (fallback families / per-slot
+        prefill disabled): every admitted prompt left-padded to a common
+        length."""
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        prefixes: List[Optional[np.ndarray]] = \
+            [None] * self.ec.max_batch
+        for slot, req in sched.running.items():
+            prefixes[slot] = np.asarray(req.prompt, np.int32)
+        return self._prefill_prefixes(prefixes, max_new)
+
+    def _rebuild_per_slot(self) -> np.ndarray:
+        """Rebuild the live caches by per-slot prefilling every active
+        prefix (elastic rebuild on a degraded mesh). Unlike the
+        whole-batch fallback this keeps per-slot capacity semantics — no
+        cross-slot padding — so a mid-stream degrade can never reject a
+        workload its admissions already accepted."""
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        kvm.reset()
+        toks = np.zeros((self.ec.max_batch,), np.int64)
+        for slot, req in sched.running.items():
+            p = np.asarray(req.prompt, np.int32)
+            if req.generated:
+                p = np.concatenate([p, np.asarray(req.generated, np.int32)])
+            rem = req.max_new_tokens - len(req.generated)
+            lb, _ = kvm.admit(slot, len(p), rem)
+            tok, kvm.caches = runner.prefill_slot(p, kvm.caches, slot, lb)
+            toks[slot] = tok
+            self.admission_prefill_tokens += lb
+        return toks
+
+    def _reprefill_active(self) -> np.ndarray:
+        """Whole-batch re-prefill of every active prefix (prompt +
+        generated so far) — the PR-2 admission path, kept for recurrent
+        families and elastic rebuilds. Re-deriving the prefix's greedy
+        continuation is exact: prefill over a prefix is mathematically the
+        decode that produced it."""
+        sched = self.scheduler
+        prefixes: List[Optional[np.ndarray]] = [None] * self.ec.max_batch
+        rem = 1
+        for slot, req in sched.running.items():
+            p = np.asarray(req.prompt, np.int32)
+            if req.generated:
                 p = np.concatenate(
-                    [p, np.asarray(r.generated, np.int32)])
-            prefixes.append(p)
+                    [p, np.asarray(req.generated, np.int32)])
+            prefixes[slot] = p
+            rem = max(rem, req.max_new_tokens - len(req.generated))
+        return self._prefill_prefixes(prefixes, rem)
+
+    def _prefill_prefixes(self, prefixes, max_new: int) -> np.ndarray:
+        kvm, runner = self.cache, self.runner
+        L = max(len(p) for p in prefixes if p is not None)
+        if L > self.ec.max_len:
+            raise RuntimeError(
+                f"prompt of {L} tokens exceeds max_len={self.ec.max_len}")
         # worst case before the next re-prefill: the longest (left-padded)
         # prefix decodes until the slowest slot retires
-        L = max(len(p) for p in prefixes if p is not None)
-        rem = max(r.max_new_tokens - len(r.generated)
-                  for r in slots if r is not None)
-        self._check_capacity(L + rem - 1)
-        return self._prefill_batch(prefixes)
+        kvm.check_capacity(L + max_new - 1)
+        tokens, starts = build_padded_batch(prefixes)
+        kvm.reset()
+        tok_dev, kvm.caches = runner.prefill(tokens, starts, kvm.caches)
+        kvm.set_batch_state(np.full((self.ec.max_batch,), L),
+                            starts if kvm.masked else None)
+        kvm.active[:] = [p is not None for p in prefixes]
+        n_active = sum(p is not None for p in prefixes)
+        self.admission_prefill_tokens += n_active * L
+        return np.asarray(tok_dev).astype(np.int64)
 
-    # ------------------------------------------------------------------
-    # Shared batch construction + capacity guards
-    # ------------------------------------------------------------------
-    def _prefill_batch(self, prefixes: List[Optional[np.ndarray]]):
-        """Left-pad ``prefixes`` (None = inactive slot -> one dummy token)
-        to their common length, build fresh caches + valid_start, and run
-        prefill. Returns (next_token, caches, valid_start, cur_len)."""
-        self.steps_since_prune = 0  # fresh caches, fresh prune cadence
-        ec = self.ec
-        B = len(prefixes)
-        L = max(len(p) for p in prefixes if p is not None)
-        if L > ec.max_len:
-            raise RuntimeError(
-                f"prompt of {L} tokens exceeds max_len={ec.max_len}")
-        toks = np.zeros((B, L), np.int32)
-        starts_np = np.full((B,), max(L - 1, 0), np.int32)  # dummy slots
-        for i, p in enumerate(prefixes):
-            if p is None:
-                continue
-            toks[i, L - len(p):] = p
-            starts_np[i] = L - len(p)
-        caches = ST.init_caches(self.cfg, B, ec.max_len)
-        starts = jnp.asarray(starts_np) if self._masked else None
-        batch = {"tokens": jnp.asarray(toks)}
-        if starts is not None:
-            batch["valid_start"] = starts
-        tok, caches = self.prefill(self.params, batch, caches)
-        return tok, caches, starts, L
-
-    def _check_capacity(self, high_water: int) -> None:
-        """Reject up-front a workload whose cache high-water mark cannot
-        fit. Only decidable when KV pruning is off — pruning bounds the
-        cache dynamically, so pruned runs rely on ``_check_overflow``."""
-        ec = self.ec
-        pruning = ec.kv_prune_interval > 0 and ec.kv_prune_keep < 1.0
-        if not pruning and high_water > ec.max_len:
-            raise RuntimeError(
-                f"max_len={ec.max_len} cannot hold {high_water} tokens "
-                "(left-padded prefix + remaining decode); raise "
-                "EngineConfig.max_len")
-
-    def _check_overflow(self, cur_len: int) -> None:
-        if cur_len >= self.ec.max_len:
-            raise RuntimeError(
-                f"KV cache overflow: decode step would write at "
-                f"{cur_len} >= max_len={self.ec.max_len}")
-
-    # ------------------------------------------------------------------
-    # Elastic degradation
-    # ------------------------------------------------------------------
+    # -- elastic degradation -----------------------------------------------
     def _degrade(self, avail: int) -> None:
         """Walk the degradation ladder to a plan fitting ``avail`` devices,
-        rebuild the mesh, and re-shard the weights onto it from the
-        checkpoint (CheckpointManager.restore with the new shardings)."""
+        rebuild the mesh, re-shard the weights onto it from the checkpoint
+        (CheckpointManager.restore with the new shardings), and surface the
+        event through the Scheduler."""
         from repro.dist import sharding as SH
         from repro.launch.mesh import make_mesh
 
@@ -281,88 +382,8 @@ class ServeEngine:
         if new_plan == self._plan:
             return
         mesh = make_mesh(new_plan.shape, new_plan.axes)
-        shardings = SH.params_shardings(self.cfg, mesh, self.params)
-        self.params = self.elastic.manager.restore(
-            self.params, step=self.elastic.step, shardings=shardings)
+        shardings = SH.params_shardings(self.cfg, mesh, self.runner.params)
+        self.runner.params = self.elastic.manager.restore(
+            self.runner.params, step=self.elastic.step, shardings=shardings)
         self._plan = new_plan
-        self.events.append(("degrade", new_plan.describe()))
-
-    # ------------------------------------------------------------------
-    # Dynamic KV pruning
-    # ------------------------------------------------------------------
-    def _maybe_prune_kv(self, caches, starts, cur_len: int):
-        """Returns (caches, starts, cur_len) — compacted when the cadence
-        fires and the cache has outgrown the keep target."""
-        ec = self.ec
-        if ec.kv_prune_interval <= 0 or ec.kv_prune_keep >= 1.0:
-            return caches, starts, cur_len
-        keep = max(1, min(int(ec.max_len * ec.kv_prune_keep), ec.max_len))
-        self.steps_since_prune += 1
-        if self.steps_since_prune < ec.kv_prune_interval or cur_len < keep:
-            return caches, starts, cur_len
-        self.steps_since_prune = 0
-        self.prune_events += 1
-        caches, new_starts = prune_kv_caches(caches, ec.kv_prune_keep,
-                                             starts=starts)
-        return caches, (new_starts if self._masked else None), keep
-
-
-def prune_kv_caches(caches: Any, keep_frac: float,
-                    starts: Optional[jax.Array] = None) -> Tuple[Any, Any]:
-    """Compact every KVCache to its top-``keep_frac`` attention-mass slots.
-
-    Stacked caches ([L, ...]) are handled with vmap. ``starts`` ([B] int32)
-    marks per-slot left-padding; pad slots score ``-inf`` and are never kept
-    ahead of real tokens. Kept entries are packed so each slot's valid
-    window ends at ``keep``: when a slot has fewer than ``keep`` valid
-    entries, the (zeroed) garbage sits at the *front*, which the returned
-    ``new_starts`` ([B] int32) masks — the compacted cache is left-padded
-    exactly like the prompts were. ``length`` becomes ``min(length, keep)``
-    per layer and attention mass resets (so the ranking adapts as decoding
-    proceeds).
-
-    Returns ``(pruned_caches, new_starts)``.
-    """
-    def one(c):
-        if not isinstance(c, A.KVCache):
-            return c  # recurrent state (ssm/mamba) passes through untouched
-
-        def single(k, v, length, mass):
-            n = k.shape[1]
-            keep = max(1, min(int(n * keep_frac), n))
-            scores = TP.kv_prune_scores(mass, length, start=starts)
-            idx = TP.select_kv_keep(scores, keep, invalid_first=True)
-            k2, v2 = TP.compact_kv_cache(k, v, idx)
-            # zero the invalid (garbage) prefix each slot may carry
-            n_valid = jnp.clip(
-                length - (starts if starts is not None else 0), 0, keep)
-            pos = jnp.arange(keep)
-            valid = pos[None, :] >= (keep - n_valid)[..., None]
-            k2 = jnp.where(valid[..., None, None], k2, 0)
-            v2 = jnp.where(valid[..., None, None], v2, 0)
-            k_new = jnp.zeros_like(k).at[:, :keep].set(k2)
-            v_new = jnp.zeros_like(v).at[:, :keep].set(v2)
-            new_len = jnp.full_like(length, keep)
-            new_mass = jnp.zeros_like(mass)
-            return A.KVCache(k_new, v_new, new_len, new_mass)
-
-        if c.k.ndim == 5:  # stacked [L, B, S, KV, Dh]
-            return jax.vmap(single)(c.k, c.v, c.length, c.attn_mass)
-        return single(c.k, c.v, c.length, c.attn_mass)
-
-    is_kv = lambda x: isinstance(x, A.KVCache)
-    pruned = jax.tree.map(one, caches, is_leaf=is_kv)
-    kv_leaves = [l for l in jax.tree_util.tree_leaves(caches, is_leaf=is_kv)
-                 if isinstance(l, A.KVCache)]
-    if not kv_leaves:  # pure recurrent state: nothing compacted
-        return pruned, starts
-    # analytic per-slot garbage prefix — identical for every layer because
-    # it depends only on length/starts/keep, not the per-layer attn mass
-    first = kv_leaves[0]
-    n = first.k.shape[-3]
-    keep = max(1, min(int(n * keep_frac), n))
-    base = (starts if starts is not None
-            else jnp.zeros((first.k.shape[-4],), jnp.int32))
-    n_valid = jnp.clip(jnp.max(first.length) - base, 0, keep)
-    new_starts = (keep - n_valid).astype(jnp.int32)
-    return pruned, new_starts
+        self.scheduler.observe("degrade", new_plan.describe())

@@ -1,0 +1,120 @@
+"""ModelRunner — owns the jitted model steps behind a compile cache.
+
+One of the three serving layers (Scheduler / KVCacheManager / ModelRunner —
+see ``repro.serving.engine``). The runner holds the params and the jitted
+prefill / per-slot prefill / decode functions, and tracks which input
+shapes have been compiled: serving cost regressions from jit churn are
+observable as ``runner.compile_count`` (our shape ledger) and
+``runner.jit_compile_count()`` (the jit caches' own entry counts).
+
+Shape discipline is what bounds recompiles:
+  * ``decode``       — one shape per batch width, compiled once.
+  * ``prefill``      — one shape per (batch, padded length); the fallback
+    whole-batch path still pays one compile per distinct common length.
+  * ``prefill_slot`` — one shape per *bucketed* prefix length (the
+    KVCacheManager rounds prompts up to power-of-two buckets), so a churny
+    request mix compiles at most ``log2(max_len)``-ish variants; the slot
+    index is a traced argument and never recompiles.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import steps as ST
+
+
+def build_padded_batch(prefixes: Sequence[Optional[np.ndarray]],
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Left-pad ``prefixes`` (None = inactive slot -> one dummy token) to
+    their common length. Returns ``(tokens [B, L], valid_start [B])``."""
+    B = len(prefixes)
+    L = max(len(p) for p in prefixes if p is not None)
+    toks = np.zeros((B, L), np.int32)
+    starts = np.full((B,), max(L - 1, 0), np.int32)  # dummy slots
+    for i, p in enumerate(prefixes):
+        if p is None:
+            continue
+        toks[i, L - len(p):] = p
+        starts[i] = L - len(p)
+    return toks, starts
+
+
+class ModelRunner:
+    """Jitted step functions for one (cfg, params) pair."""
+
+    def __init__(self, cfg: ModelConfig, params: Any):
+        self.cfg = cfg
+        self.params = params
+        self.masked = cfg.family in ST.MASKABLE_FAMILIES
+        self.supports_slot_prefill = cfg.family in ST.SLOT_PREFILL_FAMILIES
+        self._prefill = jax.jit(ST.make_prefill(cfg))
+        self._decode = jax.jit(ST.make_decode_step(cfg))
+        self._prefill_slot = (jax.jit(ST.make_prefill_slot(cfg))
+                              if self.supports_slot_prefill else None)
+        self._compiled: set = set()
+
+    # -- steps -------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, valid_start: Optional[np.ndarray],
+                caches: Any) -> Tuple[jax.Array, Any]:
+        """Whole-batch prefill of ``tokens`` [B, L] (left-padded; pad depth
+        per row in ``valid_start``). Returns (next_token [B], caches)."""
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.masked and valid_start is not None:
+            batch["valid_start"] = jnp.asarray(valid_start, jnp.int32)
+        self._compiled.add(("prefill",) + tokens.shape)
+        return self._prefill(self.params, batch, caches)
+
+    def prefill_slot(self, prompt: np.ndarray, caches: Any, slot: int,
+                     bucket_len: int) -> Tuple[int, Any]:
+        """Prefill one prompt into batch row ``slot`` of the live caches,
+        padded to ``bucket_len`` (from ``KVCacheManager.admit``). Returns
+        (next_token as int, caches)."""
+        if self._prefill_slot is None:
+            raise RuntimeError(
+                f"per-slot prefill unsupported for family "
+                f"'{self.cfg.family}' — use the whole-batch prefill path")
+        P = len(prompt)
+        row = np.zeros((1, bucket_len), np.int32)
+        row[0, bucket_len - P:] = prompt
+        batch = {"tokens": jnp.asarray(row),
+                 "valid_start": jnp.asarray([bucket_len - P], jnp.int32)}
+        self._compiled.add(("prefill_slot", bucket_len))
+        tok, caches = self._prefill_slot(self.params, batch, caches,
+                                         jnp.asarray(slot, jnp.int32))
+        return int(np.asarray(tok)[0]), caches
+
+    def decode(self, tokens: np.ndarray, caches: Any,
+               valid_start: Optional[jax.Array]) -> Tuple[jax.Array, Any]:
+        """One decode step for every slot. ``tokens`` [B] host ints."""
+        self._compiled.add(("decode", len(tokens)))
+        return self._decode(self.params, jnp.asarray(tokens,
+                                                     jnp.int32)[:, None],
+                            caches, valid_start=valid_start)
+
+    # -- compile observability ---------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        """Distinct step shapes dispatched so far (our ledger)."""
+        return len(self._compiled)
+
+    def compiled_shapes(self) -> List[Tuple]:
+        return sorted(self._compiled)
+
+    def jit_compile_count(self) -> int:
+        """Total entries across the jit caches themselves (ground truth —
+        counts what XLA actually compiled, including dtype/sharding
+        variants our shape ledger can't see)."""
+        fns = [self._prefill, self._decode] + (
+            [self._prefill_slot] if self._prefill_slot is not None else [])
+        total = 0
+        for fn in fns:
+            try:
+                total += fn._cache_size()
+            except AttributeError:  # older jax: fall back to the ledger
+                return self.compile_count
+        return total

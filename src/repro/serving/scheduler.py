@@ -1,0 +1,91 @@
+"""Scheduler — admission/retirement policy over waiting + in-flight requests.
+
+One of the three serving layers (Scheduler / KVCacheManager / ModelRunner —
+see ``repro.serving.engine``). The Scheduler owns *which request runs in
+which slot and when*; it never touches device state. Both serve paths
+(static waves and continuous batching) drive their request lifecycles
+through it, so they emit one unified event stream:
+
+    ("admit",   uid)    request entered a slot
+    ("retire",  uid)    request finished, slot freed
+    ("degrade", desc)   elastic event observed mid-stream (mesh shrank)
+
+Admission order is policy-pluggable: pass ``policy="fifo"`` (default) or a
+callable ``policy(waiting: Sequence[Request]) -> int`` returning the index
+of the next request to admit — e.g. shortest-prompt-first for latency-aware
+token-pruning experiments (HeatViT/SPViT motivate keeping such policy out
+of the execution loop).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
+
+# Request lives in engine.py (public API compat); import lazily to avoid a
+# cycle — the annotation below is intentionally loose.
+Request = Any
+
+PolicyFn = Callable[[Sequence[Request]], int]
+
+
+def fifo_policy(waiting: Sequence[Request]) -> int:
+    return 0
+
+
+_POLICIES: Dict[str, PolicyFn] = {"fifo": fifo_policy}
+
+
+class Scheduler:
+    """Tracks waiting requests and slot occupancy; decides admissions."""
+
+    def __init__(self, num_slots: int, policy: "str | PolicyFn" = "fifo"):
+        if num_slots <= 0:
+            raise ValueError(f"num_slots must be positive, got {num_slots}")
+        self.num_slots = num_slots
+        self.policy: PolicyFn = (_POLICIES[policy]
+                                 if isinstance(policy, str) else policy)
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}   # slot -> request
+        self.events: List[Tuple[str, Any]] = []
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> None:
+        self.waiting.extend(requests)
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.num_slots) if i not in self.running]
+
+    def schedule(self) -> List[Tuple[int, Request]]:
+        """Admit waiting requests into free slots (policy order). Returns
+        the [(slot, request), ...] admitted this call and emits ``admit``
+        events for each."""
+        admitted: List[Tuple[int, Request]] = []
+        for slot in self.free_slots():
+            if not self.waiting:
+                break
+            idx = self.policy(self.waiting)
+            req = self.waiting[idx]
+            del self.waiting[idx]
+            self.running[slot] = req
+            self.events.append(("admit", req.uid))
+            admitted.append((slot, req))
+        return admitted
+
+    def retire(self, slot: int) -> Request:
+        """Free ``slot``; emits a ``retire`` event for its request."""
+        req = self.running.pop(slot)
+        self.events.append(("retire", req.uid))
+        return req
+
+    # -- observability -----------------------------------------------------
+    def observe(self, kind: str, payload: Any = None) -> None:
+        """Record an externally observed event (e.g. elastic degradation)
+        into the same stream as admit/retire."""
+        self.events.append((kind, payload))
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def num_admissions(self) -> int:
+        return sum(1 for e in self.events if e[0] == "admit")

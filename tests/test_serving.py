@@ -198,22 +198,30 @@ def test_continuous_overflow_raises(engine_setup):
 
 
 def test_capacity_accounts_for_left_padding(engine_setup):
-    """A short prompt with a long decode budget is left-padded to the
-    longest prompt in the batch, so its writes reach pad + prompt + new —
-    the capacity check must use the padded length, not each request's own
-    prompt length (regression: used to pass the check then crash
-    mid-stream after the outputs were already half-generated)."""
+    """Whole-batch prefill left-pads a short prompt to the longest prompt
+    in the batch, so its writes reach pad + prompt + new — the capacity
+    check must use the padded length, not each request's own prompt length
+    (regression: used to pass the check then crash mid-stream after the
+    outputs were already half-generated). Per-slot admission pads each
+    prompt only to its own bucket, so the same workload fits: the check
+    must account for exactly the padding each path actually writes."""
     cfg, params = engine_setup
-    ec = EngineConfig(max_batch=2, max_len=40)
     reqs = lambda: [Request(uid=0, prompt=np.arange(30, dtype=np.int32),
                             max_new_tokens=4),
                     Request(uid=1, prompt=np.arange(4, dtype=np.int32),
                             max_new_tokens=30)]
+    # whole-batch paths: padded high-water 30 + 30 - 1 > 40 -> refuse
+    legacy = EngineConfig(max_batch=2, max_len=40, per_slot_prefill=False)
     with pytest.raises(RuntimeError, match="max_len"):
-        ServeEngine(cfg, params, ec).run_continuous(reqs())
+        ServeEngine(cfg, params, legacy).run_continuous(reqs())
+    # static waves decode until the slowest request finishes, so even the
+    # per-slot path's high-water is bucket(30) + 30 - 1 = 61 > 40 -> refuse
     with pytest.raises(RuntimeError, match="max_len"):
-        ServeEngine(cfg, params, ec).run(reqs())
-    ok = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+        ServeEngine(cfg, params,
+                    EngineConfig(max_batch=2, max_len=40)).run(reqs())
+    # per-slot admission: worst slot is bucket(4)=8 + 30 - 1 = 37 <= 40,
+    # the workload fits without raising max_len (the padding win)
+    ok = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=40))
     out = ok.run_continuous(reqs())
     assert {k: len(v) for k, v in out.items()} == {0: 4, 1: 30}
 

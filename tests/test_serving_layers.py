@@ -1,0 +1,324 @@
+"""PR-3 layered serving API tests: Scheduler / KVCacheManager / ModelRunner
+composition, per-slot prefill equivalence, bounded jit recompiles under
+churn, EngineConfig validation, and unified event telemetry."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving import (EngineConfig, KVCacheManager, Request, Scheduler,
+                           ServeEngine, bucket_length)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_requests(num=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, 128, int(rng.integers(3, 12)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for i in range(num)]
+
+
+# ---------------------------------------------------------------------------
+# Per-slot prefill equivalence
+# ---------------------------------------------------------------------------
+def test_per_slot_equivalence_staggered(engine_setup):
+    """Greedy tokens must be bit-exact between per-slot prefill admission
+    and the PR-2 whole-batch re-prefill, under a churny mix where slots
+    free and re-admit mid-stream at unequal per-row cache lengths."""
+    cfg, params = engine_setup
+    mk = lambda per_slot: EngineConfig(max_batch=2, max_len=64,
+                                       per_slot_prefill=per_slot)
+    new = ServeEngine(cfg, params, mk(True)).serve(
+        _mixed_requests(), continuous=True)
+    legacy = ServeEngine(cfg, params, mk(False)).serve(
+        _mixed_requests(), continuous=True)
+    assert new == legacy
+    assert sorted(new) == list(range(6))
+
+
+def test_per_slot_equivalence_with_kv_pruning(engine_setup):
+    """With every request admitted at t=0 (slots >= requests) the prune
+    cadence fires identically on both admission paths — outputs must stay
+    bit-exact with KV pruning enabled, and pruning must actually fire."""
+    cfg, params = engine_setup
+    reqs = lambda: [Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                            max_new_tokens=10),
+                    Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 7,
+                            max_new_tokens=12)]
+    mk = lambda per_slot: EngineConfig(
+        max_batch=2, max_len=24, kv_prune_interval=2, kv_prune_keep=0.5,
+        per_slot_prefill=per_slot)
+    eng_new = ServeEngine(cfg, params, mk(True))
+    eng_old = ServeEngine(cfg, params, mk(False))
+    out_new = eng_new.serve(reqs(), continuous=True)
+    out_old = eng_old.serve(reqs(), continuous=True)
+    assert out_new == out_old
+    assert eng_new.prune_events > 0
+    assert eng_new.prune_events == eng_old.prune_events
+
+
+def test_continuous_matches_isolated_request(engine_setup):
+    """A request served alongside churny slot-mates must generate exactly
+    the tokens it generates alone — per-slot cache writes and per-row
+    masks may never leak across rows."""
+    cfg, params = engine_setup
+    probe = lambda: Request(uid=99, prompt=np.arange(6, dtype=np.int32) + 2,
+                            max_new_tokens=8)
+    ec = EngineConfig(max_batch=2, max_len=64)
+    alone = ServeEngine(cfg, params, ec).serve([probe()], continuous=True)
+    crowd = _mixed_requests(5) + [probe()]
+    together = ServeEngine(cfg, params, ec).serve(crowd, continuous=True)
+    assert together[99] == alone[99]
+
+
+# ---------------------------------------------------------------------------
+# Bounded recompiles + admission cost
+# ---------------------------------------------------------------------------
+def test_bounded_recompiles_under_churn(engine_setup):
+    """Under a churny request mix with bucketing on, distinct jit
+    compilations of the per-slot prefill stay <= the number of distinct
+    prefix-length buckets."""
+    cfg, params = engine_setup
+    reqs = _mixed_requests(10, seed=11)
+    ec = EngineConfig(max_batch=2, max_len=64)
+    eng = ServeEngine(cfg, params, ec)
+    eng.serve(reqs, continuous=True)
+    buckets = {bucket_length(len(r.prompt), ec.max_len,
+                             ec.prefill_bucket_min) for r in reqs}
+    slot_fn = eng.runner._prefill_slot
+    try:
+        compiles = slot_fn._cache_size()
+    except AttributeError:
+        compiles = sum(1 for k in eng.runner.compiled_shapes()
+                       if k[0] == "prefill_slot")
+    assert compiles <= len(buckets), (compiles, buckets)
+    # the shape ledger agrees: one prefill_slot entry per bucket
+    slot_shapes = {k for k in eng.runner.compiled_shapes()
+                   if k[0] == "prefill_slot"}
+    assert len(slot_shapes) <= len(buckets)
+
+
+def test_admission_cost_independent_of_active_slots(engine_setup):
+    """Per-slot admission prefills only the admitted prompt's bucket: the
+    per-admission token cost must not change with slot count, while the
+    PR-2 re-prefill path's cost grows with occupancy."""
+    cfg, params = engine_setup
+    def cost(slots, per_slot):
+        ec = EngineConfig(max_batch=slots, max_len=64,
+                          per_slot_prefill=per_slot)
+        eng = ServeEngine(cfg, params, ec)
+        eng.serve(_mixed_requests(8, seed=5), continuous=True)
+        return eng.stats()["prefill_tokens_per_admission"]
+
+    assert cost(2, True) == cost(4, True)  # bucket sizes only
+    # whole-batch re-prefill pays for every active prefix per admission
+    assert cost(4, False) > cost(4, True)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kwargs, match", [
+    (dict(max_batch=0), "max_batch"),
+    (dict(max_batch=-2), "max_batch"),
+    (dict(max_len=0), "max_len"),
+    (dict(kv_prune_keep=0.0), "kv_prune_keep"),
+    (dict(kv_prune_keep=1.5), "kv_prune_keep"),
+    (dict(kv_prune_interval=-1), "kv_prune_interval"),
+    (dict(prefill_bucket_min=0), "prefill_bucket_min"),
+])
+def test_engine_config_validation(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kwargs)
+
+
+def test_engine_config_valid_defaults():
+    ec = EngineConfig()
+    assert ec.max_batch > 0 and ec.per_slot_prefill
+
+
+# ---------------------------------------------------------------------------
+# Unified event telemetry
+# ---------------------------------------------------------------------------
+def test_static_path_emits_same_event_stream(engine_setup):
+    """The static-wave path must emit the same admit/retire stream through
+    the Scheduler as the continuous path (PR-2 recorded events only for
+    run_continuous)."""
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=64)
+    eng_s = ServeEngine(cfg, params, ec)
+    eng_c = ServeEngine(cfg, params, ec)
+    eng_s.serve(_mixed_requests(5, seed=7))
+    eng_c.serve(_mixed_requests(5, seed=7), continuous=True)
+    for eng in (eng_s, eng_c):
+        admits = sorted(u for k, u in eng.events if k == "admit")
+        retires = sorted(u for k, u in eng.events if k == "retire")
+        assert admits == list(range(5))
+        assert retires == list(range(5))
+    # every event is (kind, payload) drawn from one shared vocabulary
+    kinds = {k for k, _ in eng_s.events} | {k for k, _ in eng_c.events}
+    assert kinds <= {"admit", "retire", "degrade"}
+
+
+# ---------------------------------------------------------------------------
+# Layer units: Scheduler + KVCacheManager
+# ---------------------------------------------------------------------------
+def test_scheduler_fifo_and_pluggable_policy():
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2) for i in range(4)]
+    s = Scheduler(2)
+    s.submit(reqs)
+    assert [r.uid for _, r in s.schedule()] == [0, 1]  # FIFO into slots
+    assert s.free_slots() == []
+    s.retire(0)
+    assert [r.uid for _, r in s.schedule()] == [2]
+    assert s.num_admissions == 3
+    assert [e for e in s.events if e[0] == "retire"] == [("retire", 0)]
+
+    lifo = Scheduler(1, policy=lambda waiting: len(waiting) - 1)
+    lifo.submit(list(reqs))
+    assert lifo.schedule()[0][1].uid == 3  # policy picks the newest
+
+
+def test_cache_manager_admit_free_and_capacity(engine_setup):
+    cfg, _ = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=32)
+    kvm = KVCacheManager(cfg, ec)
+    kvm.reset()
+    lb, start = kvm.admit(0, prompt_len=5, max_new_tokens=4)
+    assert lb == bucket_length(5, 32, ec.prefill_bucket_min) == 8
+    assert start == 3 and kvm.active[0]
+    with pytest.raises(RuntimeError, match="max_len"):
+        kvm.admit(1, prompt_len=5, max_new_tokens=30)  # 8 + 29 > 32
+    with pytest.raises(RuntimeError, match="exceeds max_len"):
+        kvm.admit(1, prompt_len=40)
+    kvm.free(0)
+    assert not kvm.active[0]
+
+
+def test_cache_manager_prune_cadence(engine_setup):
+    cfg, _ = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=16, kv_prune_interval=2,
+                      kv_prune_keep=0.5)
+    kvm = KVCacheManager(cfg, ec)
+    kvm.reset()
+    kvm.admit(0, prompt_len=10)
+    assert not kvm.maybe_prune()      # cadence: 1 of 2 steps
+    assert kvm.maybe_prune()          # fires: length 10 >= keep 8
+    assert kvm.prune_events == 1
+    assert int(kvm.lengths.max()) == 8
+    # short caches skip: nothing to prune below the keep target
+    kvm.reset()
+    kvm.admit(0, prompt_len=4)
+    assert not kvm.maybe_prune() and not kvm.maybe_prune()
+    assert kvm.prune_events == 1      # unchanged
+
+
+def test_prune_cadence_ignores_freed_slots(engine_setup):
+    """A retired slot's buffer position keeps advancing with every batched
+    decode; the prune cadence must gauge growth from ACTIVE slots only
+    (regression: a freed long-prompt slot used to drive compactions of a
+    live short request that never reached the keep target)."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=256, kv_prune_interval=4, kv_prune_keep=0.25))
+    reqs = [Request(uid=0, prompt=np.arange(60, dtype=np.int32),
+                    max_new_tokens=2),     # retires early at ~62 real tokens
+            Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=30)]    # never exceeds 34 < keep=64
+    out = eng.serve(reqs, continuous=True)
+    assert {k: len(v) for k, v in out.items()} == {0: 2, 1: 30}
+    assert eng.prune_events == 0
+
+
+def test_bucket_padding_never_rejects_feasible_prompt(engine_setup):
+    """A prompt whose raw length + decode budget fits max_len must be
+    admitted even when its power-of-two bucket (capped at max_len) would
+    not (regression: prompt 40 / max_new 4 / max_len 56 bucketed to 56 and
+    raised, though 40 + 3 = 43 <= 56 and the PR-2 path served it)."""
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=56)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(40, dtype=np.int32),
+                            max_new_tokens=4)]
+    for continuous in (True, False):
+        eng = ServeEngine(cfg, params, ec)
+        out = eng.serve(reqs(), continuous=continuous)
+        assert len(out[0]) == 4
+    # infeasible stays infeasible: the raw prompt itself cannot fit
+    with pytest.raises(RuntimeError, match="max_len"):
+        ServeEngine(cfg, params, ec).serve(
+            [Request(uid=0, prompt=np.arange(40, dtype=np.int32),
+                     max_new_tokens=30)], continuous=True)
+
+
+def test_bucket_padding_leaves_prune_headroom(engine_setup):
+    """With KV pruning on, bucket padding must leave enough decode headroom
+    for the first compaction to fire (regression: prompt 20 bucketed to
+    max_len=24 put the write head at capacity and overflowed on the first
+    decode, while the PR-2 path served the same config)."""
+    cfg, params = engine_setup
+    ec = EngineConfig(max_batch=2, max_len=24, kv_prune_interval=2,
+                      kv_prune_keep=0.5)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                            max_new_tokens=8)]
+    eng = ServeEngine(cfg, params, ec)
+    out = eng.serve(reqs(), continuous=True)
+    assert len(out[0]) == 8
+    assert eng.prune_events > 0
+    # matches the whole-batch path on the same workload
+    legacy = ServeEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=24, kv_prune_interval=2, kv_prune_keep=0.5,
+        per_slot_prefill=False)).serve(reqs(), continuous=True)
+    assert out == legacy
+
+
+def test_elastic_rebuild_keeps_per_slot_capacity(engine_setup, tmp_path):
+    """A mid-stream degrade must rebuild via per-slot prefill: the
+    whole-batch fallback's left-padding would reject this workload
+    (bucket(4) + 30 - 1 = 37 <= 40 per slot, but common-L padding needs
+    30 + 30 - 1 = 59 > 40) and crash in-flight requests. Outputs must be
+    bit-exact against an undisturbed run, with a degrade event emitted."""
+    cfg, params = engine_setup
+    from repro.checkpoint import CheckpointManager
+    from repro.dist.elastic import MeshPlan
+    from repro.serving import ElasticContext
+
+    manager = CheckpointManager(str(tmp_path), keep=1)
+    manager.save(0, params)
+    probes = {"n": 0}
+
+    def device_count():
+        probes["n"] += 1
+        return 2 if probes["n"] <= 3 else 1  # lose a device after 3 probes
+
+    elastic = ElasticContext(manager=manager,
+                             plan=MeshPlan((2, 1), ("data", "model")),
+                             budgets=[1], device_count=device_count)
+    ec = EngineConfig(max_batch=2, max_len=40)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(30, dtype=np.int32),
+                            max_new_tokens=4),
+                    Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=30)]
+    healthy = ServeEngine(cfg, params, ec).serve(reqs(), continuous=True)
+    eng = ServeEngine(cfg, params, ec, elastic=elastic)
+    degraded = eng.serve(reqs(), continuous=True)
+    assert [e for e in eng.events if e[0] == "degrade"]
+    assert degraded == healthy
+
+
+def test_bucket_length():
+    assert bucket_length(1, 64) == 8
+    assert bucket_length(8, 64) == 8
+    assert bucket_length(9, 64) == 16
+    assert bucket_length(33, 64) == 64
+    assert bucket_length(60, 64) == 64   # capped at max_len
+    assert bucket_length(5, 64, lo=4) == 8
