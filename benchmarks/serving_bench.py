@@ -18,16 +18,16 @@ tokens/s plus the two costs the PR-3 redesign targets:
     PYTHONPATH=src python benchmarks/serving_bench.py            # full
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI lane
 
-A ``BENCH_serving.json`` artifact (all rows + config) is written next to
-the working directory (``--out`` overrides). ``--smoke`` runs a
-seconds-scale configuration and exits non-zero if any path fails to serve
-every request (the CI fast lane runs it so serving-path regressions fail
-visibly).
+A ``BENCH_serving.json`` artifact (all rows + config, written through the
+schema-versioned ``repro.bench`` envelope shared with vision_bench.py) is
+written next to the working directory (``--out`` overrides). ``--smoke``
+runs a seconds-scale configuration and exits non-zero if any path fails to
+serve every request (the CI fast lane runs it so serving-path regressions
+fail visibly).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -146,14 +146,13 @@ def main():
                  / res["cont-reprefill"]["tok_s"])
     print(f"continuous vs static: {speedup:.2f}x; "
           f"per-slot vs re-prefill admission: {vs_legacy:.2f}x")
-    artifact = {
-        "config": {k: v for k, v in vars(args).items() if k != "out"},
-        "results": res,
-        "continuous_vs_static": speedup,
-        "per_slot_vs_reprefill": vs_legacy,
-    }
-    with open(args.out, "w") as f:
-        json.dump(artifact, f, indent=2)
+    from repro.bench import write_bench_artifact
+    write_bench_artifact(
+        args.out, kind="serving",
+        config={k: v for k, v in vars(args).items() if k != "out"},
+        results=res,
+        extra={"continuous_vs_static": speedup,
+               "per_slot_vs_reprefill": vs_legacy})
     print(f"wrote {args.out}")
     if not ok:
         print("FAIL: not every request was served", file=sys.stderr)

@@ -1,0 +1,165 @@
+"""Naive padded batching vs load-balanced ragged bucketing for ViT serving.
+
+The packed ViT's token pruning leaves the in-flight population ragged:
+images enter at different resolutions and shed tokens at every TDM layer at
+their own keep rates. This bench serves an identical mixed request stream
+through the ``VisionEngine`` under both batching strategies:
+
+* ``naive``    — per segment, one tile padded to the largest member's token
+  count and to the full slot width (the classic padded batch). Small
+  images pay the largest image's quadratic attention cost.
+* ``balanced`` — the ``RaggedBatcher`` regroups into dense token-count
+  buckets (the software twin of the paper's load balancing across PE
+  lanes); with ``token_tile=1`` results are additionally bit-exact against
+  the single-request offline path.
+
+Reported per mode: throughput (images/s and token·segment cells/s), padding
+waste, and the two compile-discipline columns (distinct buckets planned vs
+jit compiles actually paid — the engine's recompile bound).
+
+    PYTHONPATH=src python benchmarks/vision_bench.py            # full
+    PYTHONPATH=src python benchmarks/vision_bench.py --smoke    # CI lane
+
+A ``BENCH_vision.json`` artifact is written through the schema-versioned
+``repro.bench`` envelope shared with serving_bench.py (``--out``
+overrides). Exit is non-zero if any mode fails to serve every request or
+exceeds its recompile bound; the full run additionally requires balanced
+bucketing to beat naive padding in throughput (the paper's load-balancing
+claim, acceptance-tested here).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def make_requests(cfg, num: int, arrival_spread: int, seed: int):
+    from repro.launch.serve_vision import make_requests as _mk
+
+    # the launcher's stream generator, skewed toward small images (the
+    # realistic mix where naive padding hurts: most requests pay the
+    # largest in-flight image's cost)
+    return _mk(cfg, num, arrival_spread, seed,
+               r_ts=[0.5, cfg.pruning.r_t],
+               size_weights=[0.5, 0.3, 0.2])
+
+
+MODES = (
+    # (name, batcher mode, token_tile)
+    ("naive", "naive", 1),
+    ("balanced", "balanced", 1),
+)
+
+
+def bench(arch: str, num: int, slots: int, arrival_spread: int,
+          image_size: int, d_model: int, seed: int):
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import packed_runner as PR
+    from repro.models import model as M
+    from repro.models import pruning_glue as PG
+    from repro.serving import VisionEngine, VisionEngineConfig
+
+    # reduced() shrinks depth/width for CPU; image_size and d_model set
+    # the per-cell compute — big enough that cell count (not dispatch
+    # overhead) dominates, which is where load balancing pays
+    cfg = get_config(arch).reduced().replace(image_size=image_size)
+    if d_model:
+        cfg = cfg.replace(d_model=d_model, d_ff=2 * d_model,
+                          head_dim=d_model // cfg.num_heads)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    scores = PG.init_scores(cfg, params, jax.random.fold_in(key, 7))
+    masked = PG.apply_pruning(cfg, params, scores)
+    packed = PR.pack_model(cfg, params, scores)
+
+    results = {}
+    for mode, bmode, tile in MODES:
+        vc = VisionEngineConfig(max_batch=slots, mode=bmode,
+                                token_tile=tile)
+        engine = VisionEngine(cfg, masked, packed, vc)
+        # warmup on the IDENTICAL stream: arrival dynamics replay exactly,
+        # so every tile shape compiles outside the timed window
+        engine.serve(make_requests(cfg, num, arrival_spread, seed))
+        warm = engine.stats()
+        reqs = make_requests(cfg, num, arrival_spread, seed)
+        t0 = time.time()
+        out = engine.serve(reqs)
+        dt = time.time() - t0
+        st = engine.stats()
+        real = st["batcher_real_cells"] - warm["batcher_real_cells"]
+        results[mode] = {
+            "seconds": dt,
+            "images_s": len(out) / dt,
+            "cells_s": real / dt,
+            "served": len(out), "expected": num,
+            "padding_waste": st["batcher_padding_waste"],
+            "buckets": st["bucket_count"],
+            "jit_compiles": st["jit_compile_count"],
+            "recompile_bound_ok":
+                st["jit_compile_count"] <= st["bucket_count"],
+        }
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deit-small")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--arrival-spread", type=int, default=4,
+                    help="admission staggered over this many engine steps")
+    ap.add_argument("--image-size", type=int, default=64,
+                    help="reduced-config image size (token load knob)")
+    ap.add_argument("--d-model", type=int, default=128,
+                    help="reduced-config width override (0 = keep)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_vision.json",
+                    help="JSON artifact path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for the CI fast lane")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.slots = 8, 4
+        args.arrival_spread, args.image_size, args.d_model = 3, 32, 0
+
+    res = bench(args.arch, args.requests, args.slots, args.arrival_spread,
+                args.image_size, args.d_model, args.seed)
+    ok = True
+    hdr = (f"{'mode':10s} {'img/s':>8s} {'cells/s':>10s} {'served':>8s} "
+           f"{'pad waste':>10s} {'buckets':>8s} {'jit':>5s}")
+    print(hdr)
+    for mode, r in res.items():
+        served = f"{r['served']}/{r['expected']}"
+        print(f"{mode:10s} {r['images_s']:8.2f} {r['cells_s']:10.0f} "
+              f"{served:>8s} {r['padding_waste']:10.1%} "
+              f"{r['buckets']:8d} {r['jit_compiles']:5d}")
+        ok &= r["served"] == r["expected"]
+        ok &= r["recompile_bound_ok"]
+    speedup = res["balanced"]["images_s"] / res["naive"]["images_s"]
+    print(f"balanced vs naive: {speedup:.2f}x images/s; padding waste "
+          f"{res['naive']['padding_waste']:.1%} -> "
+          f"{res['balanced']['padding_waste']:.1%}")
+
+    from repro.bench import write_bench_artifact
+    write_bench_artifact(
+        args.out, kind="vision",
+        config={k: v for k, v in vars(args).items() if k != "out"},
+        results=res,
+        extra={"balanced_vs_naive": speedup})
+    print(f"wrote {args.out}")
+    if not ok:
+        print("FAIL: unserved requests or recompile bound exceeded",
+              file=sys.stderr)
+        sys.exit(1)
+    if not args.smoke and speedup <= 1.0:
+        print(f"FAIL: balanced bucketing ({res['balanced']['images_s']:.2f} "
+              f"img/s) did not beat naive padding "
+              f"({res['naive']['images_s']:.2f} img/s)", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Schema-versioned JSON bench artifacts.
+
+Every benchmark that CI uploads (``BENCH_serving.json``,
+``BENCH_vision.json``, ...) writes through :func:`write_bench_artifact`, so
+downstream consumers (dashboards, regression diffing, the nightly lane) see
+ONE envelope instead of per-script ad-hoc dicts:
+
+    {
+      "schema_version": 1,
+      "kind":    "<benchmark family, e.g. 'serving' | 'vision'>",
+      "created_unix": <float epoch seconds>,
+      "config":  {...},         # the knobs the run was configured with
+      "results": {...},         # per-mode measurements
+      ...extra top-level summary keys (speedups etc.)
+    }
+
+Bump ``SCHEMA_VERSION`` when the envelope itself changes shape; kind-local
+result layouts may evolve freely (consumers dispatch on ``kind``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, Optional
+
+SCHEMA_VERSION = 1
+
+_RESERVED = ("schema_version", "kind", "created_unix", "config", "results")
+
+
+def write_bench_artifact(path: str, kind: str, config: Dict[str, Any],
+                         results: Dict[str, Any],
+                         extra: Optional[Dict[str, Any]] = None
+                         ) -> Dict[str, Any]:
+    """Write the envelope to ``path``; returns the dict written. ``extra``
+    keys land at the top level (summary scalars) and must not collide with
+    the envelope's own fields."""
+    artifact: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "kind": kind,
+        "created_unix": time.time(),
+        "config": config,
+        "results": results,
+    }
+    for key, value in (extra or {}).items():
+        if key in _RESERVED:
+            raise ValueError(f"extra key {key!r} collides with the "
+                             f"artifact envelope")
+        artifact[key] = value
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, default=str)
+    return artifact
+
+
+def load_bench_artifact(path: str,
+                        expect_kind: Optional[str] = None) -> Dict[str, Any]:
+    """Read + validate an artifact envelope (schema version and, if given,
+    kind). The smoke lanes use this to fail loudly on malformed output."""
+    with open(path) as f:
+        artifact = json.load(f)
+    missing = [k for k in _RESERVED if k not in artifact]
+    if missing:
+        raise ValueError(f"{path}: not a bench artifact — missing {missing}")
+    if artifact["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema_version {artifact['schema_version']} != "
+            f"supported {SCHEMA_VERSION}")
+    if expect_kind is not None and artifact["kind"] != expect_kind:
+        raise ValueError(f"{path}: kind {artifact['kind']!r} != "
+                         f"{expect_kind!r}")
+    return artifact

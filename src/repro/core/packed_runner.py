@@ -9,10 +9,31 @@ the masked-dense forward (tests/test_packed_runner.py).
 
 MLP column/row-pruned weights stay dense-masked (the paper maps them to
 DBMM — a dense matmul over the shrunken width — which XLA already emits).
+
+Per-stage segmentation (serving.vision)
+---------------------------------------
+The forward is decomposed into *segments* whose boundaries are the TDM
+layers — exactly the points where per-image token counts change:
+
+    ("embed",)          patches -> tokens          (count = n_patches + 1)
+    ("layers", lo, hi)  encoder layers [lo, hi)    (count constant)
+    ("tdm", i)          encoder layer i with the TDM (count shrinks)
+    ("head",)           final norm + CLS readout   (-> logits)
+
+``forward_vit_packed`` composes the segments sequentially (one request,
+offline), while the vision serving engine schedules each segment over a
+*ragged* population of in-flight images, regrouping between segments
+(``repro.serving.ragged_batcher``). ``PackedVitSegments`` owns the jitted
+per-segment step functions behind a compile ledger, mirroring
+``serving.runner.ModelRunner`` for the LM path.
+
+Every segment optionally takes ``n_valid`` ([B] int32, real token count per
+row): token-padded rows are masked out of attention and accumulate exactly
+zero TDM score, so batching never leaks padding into a request's logits.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -44,62 +65,219 @@ def pack_model(cfg: ModelConfig, params: Dict, scores: Dict,
     return out
 
 
-def forward_vit_packed(cfg: ModelConfig, params: Dict,
-                       packed: Dict[str, packing.PackedWeight],
-                       patches: jax.Array,
-                       use_tdm: bool | None = None) -> M.Output:
-    """ViT forward with attention projections executed via the SBMM kernel
-    (interpret mode on CPU; native Pallas on TPU backends).
+# ===========================================================================
+# Stage plan
+# ===========================================================================
+Segment = Tuple  # ("embed",) | ("layers", lo, hi) | ("tdm", i) | ("head",)
 
-    ``params`` should be the MASKED tree (``PG.apply_pruning``) so the
-    MLPs run masked-dense (the paper's DBMM path); the SBMM-packed
-    attention weights carry their masks structurally."""
+
+def vit_segments(cfg: ModelConfig,
+                 use_tdm: Optional[bool] = None) -> Tuple[Segment, ...]:
+    """Per-stage segmentation of the packed ViT forward: one segment per
+    maximal run of constant token count, TDM layers as their own segments
+    (prune boundaries ARE batching boundaries for the serving engine)."""
     p = cfg.pruning
     if use_tdm is None:
         use_tdm = p.token_pruning_enabled
-    adt = jnp.float32  # kernel path runs fp32 end to end
+    tdm_layers = sorted(p.tdm_layers) if use_tdm else []
+    segs: List[Segment] = [("embed",)]
+    prev = 0
+    for t in tdm_layers:
+        if not 0 <= t < cfg.num_layers:
+            raise ValueError(f"tdm layer {t} outside [0, {cfg.num_layers})")
+        if t > prev:
+            segs.append(("layers", prev, t))
+        segs.append(("tdm", t))
+        prev = t + 1
+    if prev < cfg.num_layers:
+        segs.append(("layers", prev, cfg.num_layers))
+    segs.append(("head",))
+    return tuple(segs)
 
+
+def tdm_keep_count(n_tokens: int, r_t: float) -> int:
+    """Static top-k count for a TDM applied at a *real* token count of
+    ``n_tokens`` (CLS included) — the per-request ``k`` the serving engine
+    passes into padded TDM segments. Derived from ``TP.num_kept_tokens``
+    (the one source of truth for the clamp rule): output count is
+    ``1 (CLS) + k + 1 (fused)``."""
+    return TP.num_kept_tokens(n_tokens, r_t, has_cls=True) - 2
+
+
+def token_trajectory(cfg: ModelConfig, n_patches: int,
+                     r_t: Optional[float] = None,
+                     use_tdm: Optional[bool] = None) -> Tuple[int, ...]:
+    """Real token count a single image carries *after* each segment of
+    ``vit_segments`` (head repeats the final count). Drives the ragged
+    batcher's bucket keys and the prune-pressure-aware admission policy."""
+    p = cfg.pruning
+    if r_t is None:
+        r_t = p.r_t
+    n = n_patches + 1  # + CLS
+    counts = []
+    for seg in vit_segments(cfg, use_tdm):
+        if seg[0] == "tdm":
+            n = TP.num_kept_tokens(n, r_t, has_cls=True)
+        counts.append(n)
+    return tuple(counts)
+
+
+# ===========================================================================
+# Segment bodies (pure functions; jitted by PackedVitSegments)
+# ===========================================================================
+def _proj(params: Dict, packed: Dict, i: int, name: str, inp: jax.Array
+          ) -> jax.Array:
+    key = f"layers/{i}/attn/{name}"
+    if key in packed:
+        return sbmm(inp, packed[key], tm=64)
+    return L.linear(inp, params["layers"][i]["attn"][name])
+
+
+def _encoder_attn(cfg: ModelConfig, params: Dict, packed: Dict,
+                  x: jax.Array, i: int, *, collect_scores: bool = False,
+                  n_valid: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Attention sublayer + residual of encoder layer ``i`` (projections
+    through SBMM when packed). ``n_valid`` masks token padding out of the
+    attention and of the TDM scoring; padded rows' scores are exactly 0."""
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lp = params["layers"][i]
+    h = L.layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+    Bc, Nc, _ = h.shape
+    q = (_proj(params, packed, i, "wq", h)
+         + lp["attn"].get("bq", 0.0)).reshape(Bc, Nc, H, Dh)
+    k = (_proj(params, packed, i, "wk", h)
+         + lp["attn"].get("bk", 0.0)).reshape(Bc, Nc, KV, Dh)
+    v = (_proj(params, packed, i, "wv", h)
+         + lp["attn"].get("bv", 0.0)).reshape(Bc, Nc, KV, Dh)
+    o = A.flash_attention_jnp(q, k, v, causal=False, kv_len=n_valid)
+    scores = None
+    if collect_scores:
+        probs = A.attention_probs_row(q[:, 0], k, kv_len=n_valid)
+        scores = probs.mean(axis=1)
+    o = o.reshape(Bc, Nc, H * Dh)
+    attn_out = _proj(params, packed, i, "wo", o) + lp["attn"].get("bo", 0.0)
+    return x + attn_out, scores
+
+
+def _encoder_mlp(cfg: ModelConfig, params: Dict, x: jax.Array,
+                 i: int) -> jax.Array:
+    lp = params["layers"][i]
+    h = L.layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+    return x + L.gelu_mlp(h, lp["mlp"])
+
+
+def vit_embed(cfg: ModelConfig, params: Dict,
+              patches: jax.Array) -> jax.Array:
+    """patches [B, N, P²·3] -> tokens [B, N+1, D] (fp32, CLS prepended).
+    Token-padded patch rows simply embed to don't-care rows; downstream
+    segments mask them via ``n_valid``."""
+    adt = jnp.float32  # kernel path runs fp32 end to end
     x = L.linear(patches.astype(adt), params["patch_embed"],
                  params["patch_bias"])
     B, N, D = x.shape
     cls = jnp.broadcast_to(params["cls"].astype(adt), (B, 1, D))
     x = jnp.concatenate([cls, x], axis=1)
-    x = x + params["pos"][None, : N + 1].astype(adt)
+    return x + params["pos"][None, : N + 1].astype(adt)
 
-    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    for i, lp in enumerate(params["layers"]):
-        has_tdm = use_tdm and (i in p.tdm_layers)
-        h = L.layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
-        Bc, Nc, _ = h.shape
 
-        def proj(name, inp):
-            key = f"layers/{i}/attn/{name}"
-            if key in packed:
-                return sbmm(inp, packed[key], tm=64)
-            return L.linear(inp, lp["attn"][name])
+def vit_layers(cfg: ModelConfig, params: Dict, packed: Dict, x: jax.Array,
+               lo: int, hi: int,
+               n_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Encoder layers [lo, hi) at constant token count."""
+    for i in range(lo, hi):
+        x, _ = _encoder_attn(cfg, params, packed, x, i, n_valid=n_valid)
+        x = _encoder_mlp(cfg, params, x, i)
+    return x
 
-        q = (proj("wq", h) + lp["attn"].get("bq", 0.0)).reshape(
-            Bc, Nc, H, Dh)
-        k = (proj("wk", h) + lp["attn"].get("bk", 0.0)).reshape(
-            Bc, Nc, KV, Dh)
-        v = (proj("wv", h) + lp["attn"].get("bv", 0.0)).reshape(
-            Bc, Nc, KV, Dh)
-        o = A.flash_attention_jnp(q, k, v, causal=False)
-        tdm_scores = None
-        if has_tdm:
-            probs = A.attention_probs_row(q[:, 0], k)
-            tdm_scores = probs.mean(axis=1)
-        o = o.reshape(Bc, Nc, H * Dh)
-        attn_out = proj("wo", o) + lp["attn"].get("bo", 0.0)
-        x = x + attn_out
-        if has_tdm:
-            x, _ = TP.tdm(x, tdm_scores, p.r_t, has_cls=True)
-        h = L.layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
-        x = x + L.gelu_mlp(h, lp["mlp"])
 
+def vit_tdm_layer(cfg: ModelConfig, params: Dict, packed: Dict,
+                  x: jax.Array, layer: int, r_t: Optional[float] = None,
+                  k: Optional[int] = None,
+                  n_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Encoder layer ``layer`` with the TDM between its attention and MLP
+    sublayers: [B, N, D] -> [B, k + 2, D] (CLS + k kept + fused). ``k``
+    must be passed when rows are token-padded (see ``TP.tdm``); otherwise
+    it derives from N and ``r_t`` exactly as the monolithic forward did."""
+    if r_t is None:
+        r_t = cfg.pruning.r_t
+    x, scores = _encoder_attn(cfg, params, packed, x, layer,
+                              collect_scores=True, n_valid=n_valid)
+    x, _ = TP.tdm(x, scores, r_t, has_cls=True, k=k)
+    return _encoder_mlp(cfg, params, x, layer)
+
+
+def vit_head(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    """Final norm + CLS readout -> logits [B, num_classes] (fp32)."""
     x = L.layer_norm(x, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
     logits = L.linear(x[:, 0], params["head"])
-    return M.Output(logits.astype(jnp.float32))
+    return logits.astype(jnp.float32)
+
+
+# ===========================================================================
+# Offline single-batch forward — the segments composed sequentially
+# ===========================================================================
+# Executor memo for forward_vit_packed: id-keyed is safe here because the
+# cached executor holds strong references to its params/packed trees, which
+# pins their ids for exactly as long as the entry lives. Bounded FIFO so
+# sweeps over many packed models don't accumulate jit caches.
+_SEGMENT_MEMO: "dict[Tuple, PackedVitSegments]" = {}
+_SEGMENT_MEMO_CAP = 8
+
+
+def _cached_segments(cfg, params, packed, use_tdm) -> "PackedVitSegments":
+    # r_t / tdm_layers only matter through the segment plan (the executor
+    # always receives k explicitly), so cfgs differing only in keep rate —
+    # the per-request-r_t reference loop — share one executor
+    import dataclasses as _dc
+    plan = vit_segments(cfg, use_tdm)
+    cfg_norm = cfg.replace(pruning=_dc.replace(cfg.pruning, r_t=1.0,
+                                               tdm_layers=()))
+    key = (plan, cfg_norm, id(params), id(packed))
+    runner = _SEGMENT_MEMO.get(key)
+    if runner is None:
+        runner = PackedVitSegments(cfg, params, packed, use_tdm=use_tdm)
+        if len(_SEGMENT_MEMO) >= _SEGMENT_MEMO_CAP:
+            _SEGMENT_MEMO.pop(next(iter(_SEGMENT_MEMO)))
+        _SEGMENT_MEMO[key] = runner
+    return runner
+def forward_vit_packed(cfg: ModelConfig, params: Dict,
+                       packed: Dict[str, packing.PackedWeight],
+                       patches: jax.Array,
+                       use_tdm: bool | None = None,
+                       segments: "Optional[PackedVitSegments]" = None
+                       ) -> M.Output:
+    """ViT forward with attention projections executed via the SBMM kernel
+    (interpret mode on CPU; native Pallas on TPU backends).
+
+    ``params`` should be the MASKED tree (``PG.apply_pruning``) so the
+    MLPs run masked-dense (the paper's DBMM path); the SBMM-packed
+    attention weights carry their masks structurally.
+
+    This is the single-request oracle the vision serving engine is
+    bit-exact against: it walks the same ``vit_segments`` plan through the
+    same *jitted* segment executor, unbatched and unpadded. (Executing the
+    segments jitted matters for exactness — XLA's fusion choices shift FP
+    reduction order relative to op-by-op eager dispatch, and jitted
+    programs are deterministic given the HLO.) Pass ``segments`` to reuse
+    an already-compiled executor (e.g. an engine's); otherwise one is
+    memoized per (cfg, params, packed, use_tdm) so repeated calls — batch
+    evaluation loops, parity tests — compile once."""
+    runner = segments if segments is not None else _cached_segments(
+        cfg, params, packed, use_tdm)
+    r_t = cfg.pruning.r_t
+    x = patches
+    n = patches.shape[1] + 1  # + CLS after embed
+    for seg in runner.plan:
+        if seg[0] == "tdm":
+            k = tdm_keep_count(n, r_t)
+            x = runner.run(seg, x, k=k)
+            n = k + 2
+        elif seg[0] == "head":
+            return M.Output(runner.run(seg, x))
+        else:
+            x = runner.run(seg, x)
+    raise AssertionError("vit_segments plan must end with ('head',)")
 
 
 def masked_dense_reference(cfg: ModelConfig, params: Dict, scores: Dict,
@@ -110,3 +288,82 @@ def masked_dense_reference(cfg: ModelConfig, params: Dict, scores: Dict,
     masked = PG.apply_pruning(cfg, params, scores)
     cfg32 = cfg.replace(dtype="float32")
     return M.forward_vit(cfg32, masked, patches, use_tdm=use_tdm)
+
+
+# ===========================================================================
+# Jitted segment executor (the vision serving engine's ModelRunner analog)
+# ===========================================================================
+class PackedVitSegments:
+    """Owns the jitted per-segment step functions for one
+    (cfg, params, packed) triple, behind a compile ledger.
+
+    Shape discipline mirrors ``serving.runner.ModelRunner``: each distinct
+    (segment, batch tile, token tile, masked?) combination compiles once;
+    ``compile_count`` is our ledger and ``jit_compile_count()`` asks the
+    jit caches themselves. The ragged batcher bounds the distinct
+    combinations to its bucket set."""
+
+    def __init__(self, cfg: ModelConfig, params: Dict,
+                 packed: Dict[str, packing.PackedWeight],
+                 use_tdm: Optional[bool] = None):
+        self.cfg = cfg
+        self.params = params
+        self.packed = packed
+        self.plan = vit_segments(cfg, use_tdm)
+        self._embed = jax.jit(
+            lambda params, patches: vit_embed(cfg, params, patches))
+        self._layers = jax.jit(
+            lambda params, packed, x, n_valid, lo, hi: vit_layers(
+                cfg, params, packed, x, lo, hi, n_valid=n_valid),
+            static_argnames=("lo", "hi"))
+        self._tdm = jax.jit(
+            lambda params, packed, x, n_valid, layer, k: vit_tdm_layer(
+                cfg, params, packed, x, layer, k=k, n_valid=n_valid),
+            static_argnames=("layer", "k"))
+        self._head = jax.jit(lambda params, x: vit_head(cfg, params, x))
+        self._compiled: set = set()
+
+    def run(self, seg: Segment, x: jax.Array,
+            n_valid: Optional[np.ndarray] = None,
+            k: Optional[int] = None) -> jax.Array:
+        """Execute one segment on a dense tile ``x``. ``n_valid`` ([B]) is
+        required whenever rows are token-padded; ``k`` is required for
+        ``tdm`` segments (uniform across the tile by batcher construction).
+        """
+        kind = seg[0]
+        nv = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+        self._compiled.add((seg, tuple(x.shape), nv is not None, k))
+        if kind == "embed":
+            return self._embed(self.params, x)
+        if kind == "layers":
+            return self._layers(self.params, self.packed, x, nv,
+                                lo=seg[1], hi=seg[2])
+        if kind == "tdm":
+            if k is None:
+                raise ValueError("tdm segments need an explicit static k "
+                                 "(per-request keep count)")
+            return self._tdm(self.params, self.packed, x, nv,
+                             layer=seg[1], k=k)
+        if kind == "head":
+            return self._head(self.params, x)
+        raise ValueError(f"unknown segment {seg!r}")
+
+    # -- compile observability ---------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        """Distinct segment tiles dispatched so far (our ledger)."""
+        return len(self._compiled)
+
+    def compiled_tiles(self) -> List[Tuple]:
+        return sorted(self._compiled, key=repr)
+
+    def jit_compile_count(self) -> int:
+        """Total entries across the jit caches (what XLA actually
+        compiled)."""
+        total = 0
+        for fn in (self._embed, self._layers, self._tdm, self._head):
+            try:
+                total += fn._cache_size()
+            except AttributeError:  # older jax: fall back to the ledger
+                return self.compile_count
+        return total

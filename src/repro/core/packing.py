@@ -29,6 +29,7 @@ import math
 from typing import Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -74,6 +75,29 @@ class PackedWeight:
                     continue
                 dense[r * b:(r + 1) * b, c * b:(c + 1) * b] = blocks[pc, s]
         return jnp.asarray(dense[:m1, :m2])
+
+
+# PackedWeight is a jit-traversable pytree: the device tensors are children,
+# the host-side layout metadata (permutation, logical shape, granularity)
+# rides as hashable static aux data — so {path: PackedWeight} dicts can be
+# passed straight into jitted segment runners (serving.vision) instead of
+# being baked into the trace as constants.
+def _pw_flatten(pw: "PackedWeight"):
+    children = (pw.blocks, pw.header, pw.counts)
+    aux = (tuple(int(c) for c in np.asarray(pw.col_perm)),
+           tuple(pw.shape), pw.block_size)
+    return children, aux
+
+
+def _pw_unflatten(aux, children) -> "PackedWeight":
+    col_perm, shape, block_size = aux
+    blocks, header, counts = children
+    return PackedWeight(blocks=blocks, header=header, counts=counts,
+                        col_perm=np.asarray(col_perm, dtype=np.int64),
+                        shape=tuple(shape), block_size=block_size)
+
+
+jax.tree_util.register_pytree_node(PackedWeight, _pw_flatten, _pw_unflatten)
 
 
 def balance_columns(col_counts: np.ndarray, lanes: int = 8) -> np.ndarray:

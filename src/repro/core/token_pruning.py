@@ -45,17 +45,26 @@ def token_importance(attn: jax.Array, score_row: int = 0) -> jax.Array:
 
 
 def tdm(z: jax.Array, scores: jax.Array, r_t: float,
-        has_cls: bool = True) -> Tuple[jax.Array, jax.Array]:
+        has_cls: bool = True, k: int | None = None
+        ) -> Tuple[jax.Array, jax.Array]:
     """Token Dropping Module.
 
     z      : ``[B, N, D]`` token matrix (CLS at index 0 when ``has_cls``).
     scores : ``[B, N]`` importance (CLS position ignored when ``has_cls``).
+    ``k``  : static kept-token override. The ragged serving path batches
+    requests whose rows are token-padded (N here is the padded tile), so the
+    keep count must come from each request's *real* token count — callers
+    pass it explicitly; padded positions must carry score 0 so they are
+    never selected (ties break toward lower indices, i.e. real tokens) and
+    contribute nothing to the fused token. Default: derived from N and
+    ``r_t`` as in the paper.
     Returns ``(z_out [B, N_kept, D], kept_idx [B, k])`` where
-    ``N_kept = num_kept_tokens(N, r_t, has_cls)``.
+    ``N_kept = (1 if has_cls) + k + 1``.
     """
     B, N, D = z.shape
     n_body = N - 1 if has_cls else N
-    k = max(1, math.ceil(n_body * r_t))
+    if k is None:
+        k = max(1, math.ceil(n_body * r_t))
 
     body = z[:, 1:, :] if has_cls else z
     s_body = scores[:, 1:] if has_cls else scores

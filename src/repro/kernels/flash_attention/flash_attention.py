@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -68,10 +70,12 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            scale: float | None = None,
                            bounded: bool = True,
                            kv_valid: int | None = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: "bool | None" = None) -> jax.Array:
     """q: [H, Nq, Dh]; k, v: [H, Nk, Dh] (same head count — GQA expansion is
     handled in ops.py). Nq % tq == 0 and Nk % tk == 0 (ops.py pads;
-    ``kv_valid`` masks key padding)."""
+    ``kv_valid`` masks key padding). ``interpret=None`` auto-detects the
+    backend (kernels.backend)."""
+    interpret = resolve_interpret(interpret)
     H, Nq, Dh = q.shape
     _, Nk, _ = k.shape
     tq = min(tq, Nq)

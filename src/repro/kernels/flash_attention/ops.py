@@ -6,23 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_offset", "tq",
                                              "tk", "bounded", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                    causal: bool = True, q_offset: int = 0,
-                    tq: int = 128, tk: int = 128, bounded: bool = True,
-                    interpret: bool | None = None) -> jax.Array:
-    """q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]. GQA handled by repeating
-    KV heads (the kernel sees matched head counts)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+def _flash_attention_jit(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool, q_offset: int,
+                         tq: int, tk: int, bounded: bool,
+                         interpret: bool) -> jax.Array:
     B, Nq, Hq, Dh = q.shape
     _, Nk, KV, _ = k.shape
     per = Hq // KV
@@ -50,3 +43,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = jax.vmap(run)(qh, kh, vh)
     out = out[:, :, :Nq]
     return jnp.moveaxis(out, 1, 2)  # [B, Nq, Hq, Dh]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_offset: int = 0,
+                    tq: int = 128, tk: int = 128, bounded: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: [B, Nq, Hq, Dh]; k, v: [B, Nk, KV, Dh]. GQA handled by repeating
+    KV heads (the kernel sees matched head counts). ``interpret=None``
+    auto-detects the backend (kernels.backend; ``REPRO_KERNEL_INTERPRET``
+    overrides) — resolved outside the jit so it is a static argument."""
+    return _flash_attention_jit(q, k, v, causal, q_offset, tq, tk, bounded,
+                                resolve_interpret(interpret))

@@ -9,19 +9,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packing import PackedWeight
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.sbmm.sbmm import sbmm_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("tm", "interpret"))
-def sbmm_raw(x: jax.Array, blocks: jax.Array, header: jax.Array,
-             tm: int = 128, interpret: bool | None = None) -> jax.Array:
-    """Pad rows/cols and run the kernel. x: [M, K_logical]."""
-    if interpret is None:
-        interpret = not _on_tpu()
+def _sbmm_raw_jit(x: jax.Array, blocks: jax.Array, header: jax.Array,
+                  tm: int, interpret: bool) -> jax.Array:
     C, S, b, _ = blocks.shape
     M, K = x.shape
     k_pad = (-K) % b
@@ -30,6 +24,16 @@ def sbmm_raw(x: jax.Array, blocks: jax.Array, header: jax.Array,
         x = jnp.pad(x, ((0, m_pad), (0, k_pad)))
     y = sbmm_pallas(x, blocks, header, tm=tm, interpret=interpret)
     return y[:M]
+
+
+def sbmm_raw(x: jax.Array, blocks: jax.Array, header: jax.Array,
+             tm: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Pad rows/cols and run the kernel. x: [M, K_logical].
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter on CPU
+    CI; ``REPRO_KERNEL_INTERPRET`` overrides) — resolved here, outside the
+    jit, so the resolved value is a static argument."""
+    return _sbmm_raw_jit(x, blocks, header, tm, resolve_interpret(interpret))
 
 
 def sbmm(x: jax.Array, packed: PackedWeight, tm: int = 128,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _sbmm_kernel(header_ref, x_ref, blocks_ref, y_ref, *, block_size: int,
                  max_kept: int, tm: int):
@@ -56,11 +58,14 @@ def _sbmm_kernel(header_ref, x_ref, blocks_ref, y_ref, *, block_size: int,
 
 
 def sbmm_pallas(x: jax.Array, blocks: jax.Array, header: jax.Array,
-                *, tm: int = 128, interpret: bool = True) -> jax.Array:
+                *, tm: int = 128,
+                interpret: "bool | None" = None) -> jax.Array:
     """x: [M, K] (K padded to n_row_blocks·b); blocks: [C, S, b, b];
     header: [C, S] int32 (-1 padding). Returns y: [M, C·b].
 
-    ``M`` must be a multiple of ``tm`` (ops.py pads)."""
+    ``M`` must be a multiple of ``tm`` (ops.py pads). ``interpret=None``
+    auto-detects the backend (kernels.backend)."""
+    interpret = resolve_interpret(interpret)
     M, K = x.shape
     C, S, b, _ = blocks.shape
     assert M % tm == 0, (M, tm)

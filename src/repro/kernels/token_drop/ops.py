@@ -9,24 +9,14 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.token_drop.token_drop import token_drop_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("r_t", "has_cls", "td",
                                              "interpret"))
-def token_drop(z: jax.Array, scores: jax.Array, r_t: float,
-               has_cls: bool = True, td: int = 128,
-               interpret: bool | None = None) -> jax.Array:
-    """Batched TDM via the Pallas kernel.
-
-    z: [B, N, D]; scores: [B, N]. Returns [B, N_kept, D] with
-    N_kept = (1 if cls) + k + 1 (fused)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+def _token_drop_jit(z: jax.Array, scores: jax.Array, r_t: float,
+                    has_cls: bool, td: int, interpret: bool) -> jax.Array:
     B, N, D = z.shape
     n_body = N - 1 if has_cls else N
     k = max(1, math.ceil(n_body * r_t))
@@ -51,3 +41,16 @@ def token_drop(z: jax.Array, scores: jax.Array, r_t: float,
     if has_cls:
         out = jnp.concatenate([z[:, :1], out], axis=1)
     return out
+
+
+def token_drop(z: jax.Array, scores: jax.Array, r_t: float,
+               has_cls: bool = True, td: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Batched TDM via the Pallas kernel.
+
+    z: [B, N, D]; scores: [B, N]. Returns [B, N_kept, D] with
+    N_kept = (1 if cls) + k + 1 (fused). ``interpret=None`` auto-detects
+    the backend (kernels.backend; ``REPRO_KERNEL_INTERPRET`` overrides) —
+    resolved outside the jit so the choice is a static argument."""
+    return _token_drop_jit(z, scores, r_t, has_cls, td,
+                           resolve_interpret(interpret))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _token_drop_kernel(keep_idx_ref, z_ref, w_ref, out_ref, *, k: int):
     """keep_idx_ref: [k] int32 (scalar prefetch)
@@ -47,10 +49,12 @@ def _token_drop_kernel(keep_idx_ref, z_ref, w_ref, out_ref, *, k: int):
 
 def token_drop_pallas(z: jax.Array, keep_idx: jax.Array,
                       drop_weights: jax.Array, *, td: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: "bool | None" = None) -> jax.Array:
     """z: [N, D]; keep_idx: [k] int32; drop_weights: [N] (normalized, zero at
     kept rows). Returns [k + 1, D]: kept tokens followed by the fused token.
-    ``D`` must be a multiple of ``td`` (ops.py pads)."""
+    ``D`` must be a multiple of ``td`` (ops.py pads). ``interpret=None``
+    auto-detects the backend (kernels.backend)."""
+    interpret = resolve_interpret(interpret)
     N, D = z.shape
     (k,) = keep_idx.shape
     assert D % td == 0, (D, td)

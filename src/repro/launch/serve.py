@@ -58,7 +58,8 @@ def simulated_loss_context(params, drop_after: int,
 def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
           max_new: int = 16, kv_prune: float = 1.0, reduced: bool = True,
           max_batch: int = 4, seed: int = 0, continuous: bool = False,
-          elastic_drop: int = 0, per_slot_prefill: bool = True):
+          elastic_drop: int = 0, per_slot_prefill: bool = True,
+          policy: str = "fifo"):
     if elastic_drop and not continuous:
         raise ValueError("--elastic-drop requires --continuous: only the "
                          "slot path probes device_count() between steps")
@@ -81,7 +82,8 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
     with tempfile.TemporaryDirectory(prefix="elastic_") as ckpt_dir:
         elastic = (simulated_loss_context(params, elastic_drop, ckpt_dir)
                    if elastic_drop else None)
-        engine = ServeEngine(cfg, params, ec, elastic=elastic)
+        engine = ServeEngine(cfg, params, ec, elastic=elastic,
+                             policy=policy)
         t0 = time.time()
         out = engine.serve(reqs, continuous=continuous)
         dt = time.time() - t0
@@ -107,13 +109,18 @@ def main():
                     help="force PR-2 whole-batch re-prefill on admission")
     ap.add_argument("--elastic-drop", type=int, default=0, metavar="N",
                     help="simulate losing half the devices after N steps")
+    ap.add_argument("--policy", default="fifo",
+                    help="admission policy: fifo | shortest_prompt_first "
+                         "| prune_pressure_aware (shared with the vision "
+                         "path)")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.prompt_len, args.max_new,
                 args.kv_prune, args.reduced, max_batch=args.max_batch,
                 continuous=args.continuous, elastic_drop=args.elastic_drop,
-                per_slot_prefill=not args.no_slot_prefill)
+                per_slot_prefill=not args.no_slot_prefill,
+                policy=args.policy)
     if args.json:
         print(json.dumps({
             "outputs": {str(k): v for k, v in out["outputs"].items()},

@@ -1,0 +1,125 @@
+"""Vision serving launcher: image requests through the VisionEngine
+(Scheduler + RaggedBatcher + PackedVitSegments).
+
+    PYTHONPATH=src python -m repro.launch.serve_vision --requests 16 \\
+        --slots 4 --mode balanced --policy prune_pressure_aware
+
+Builds the reduced DeiT config, runs the paper's simultaneous pruning
+offline (init scores -> hard masks -> SBMM packing), then serves a mixed
+stream of image resolutions and per-request token keep rates through the
+continuous-batching engine. ``--mode naive`` A/Bs the classic padded batch
+against the load-balanced bucketing; ``--policy`` selects the admission
+policy shared with the LM path (fifo / shortest_prompt_first /
+prune_pressure_aware).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import packed_runner as PR
+from repro.models import model as M
+from repro.models import pruning_glue as PG
+from repro.serving import VisionEngine, VisionEngineConfig, VisionRequest
+
+
+def make_requests(cfg, num: int, arrival_spread: int, seed: int,
+                  r_ts=None, size_weights=None):
+    """Synthetic mixed request stream: three image resolutions (full,
+    near-full, half side), per-request token keep rates, staggered
+    arrivals. Shared by this launcher and benchmarks/vision_bench.py (the
+    bench passes a size-skewed ``size_weights``)."""
+    rng = np.random.default_rng(seed)
+    side = cfg.image_size // cfg.patch_size
+    sizes = sorted({max(1, side // 2) ** 2, max(1, side - 1) ** 2,
+                    side ** 2})
+    if r_ts is None:
+        r_ts = [0.5, cfg.pruning.r_t, None]  # None = engine default
+    if size_weights is None:
+        p = None  # uniform
+    else:
+        p = np.asarray(size_weights[:len(sizes)], np.float64)
+        p = p / p.sum()
+    pdim = cfg.patch_size ** 2 * 3
+    return [VisionRequest(
+        uid=i,
+        patches=rng.standard_normal(
+            (int(rng.choice(sizes, p=p)), pdim)).astype(np.float32),
+        r_t=r_ts[int(rng.integers(len(r_ts)))],
+        arrival_step=int(rng.integers(0, arrival_spread + 1)))
+        for i in range(num)]
+
+
+def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
+          mode: str = "balanced", token_tile: int = 1,
+          policy: str = "fifo", image_size: int = 0,
+          arrival_spread: int = 4, seed: int = 0):
+    cfg = get_config(arch).reduced()
+    if image_size:
+        cfg = cfg.replace(image_size=image_size)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    scores = PG.init_scores(cfg, params, jax.random.fold_in(key, 7))
+    vc = VisionEngineConfig(max_batch=slots, mode=mode,
+                            token_tile=token_tile)
+    engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
+                                      policy=policy)
+    reqs = make_requests(cfg, num_requests, arrival_spread, seed)
+    t0 = time.time()
+    out = engine.serve(reqs)
+    dt = time.time() - t0
+    return {"outputs": out, "seconds": dt,
+            "images_per_s": len(out) / dt,
+            "events": list(engine.events),
+            "stats": engine.stats()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deit-small")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mode", choices=("balanced", "naive"),
+                    default="balanced")
+    ap.add_argument("--token-tile", type=int, default=1,
+                    help="token bucket quantization (1 = exact, bit-exact)")
+    ap.add_argument("--policy", default="fifo",
+                    help="admission policy: fifo | shortest_prompt_first "
+                         "| prune_pressure_aware")
+    ap.add_argument("--image-size", type=int, default=0,
+                    help="override the reduced config's image size")
+    ap.add_argument("--arrival-spread", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="print a machine-readable result line")
+    args = ap.parse_args()
+    out = serve(args.arch, args.requests, args.slots, args.mode,
+                args.token_tile, args.policy, args.image_size,
+                args.arrival_spread, args.seed)
+    if args.json:
+        print(json.dumps({
+            "top1": {str(u): int(np.argmax(lg))
+                     for u, lg in out["outputs"].items()},
+            "images_per_s": out["images_per_s"],
+            "stats": out["stats"],
+        }))
+    else:
+        st = out["stats"]
+        print(f"served {st['images_served']} images in "
+              f"{out['seconds']:.2f}s ({out['images_per_s']:.1f} img/s, "
+              f"policy={args.policy}, mode={args.mode})")
+        print(f"steps={st['steps']} tiles={st['batcher_tiles']} "
+              f"padding_waste={st['batcher_padding_waste']:.1%} "
+              f"jit_compiles={st['jit_compile_count']} <= "
+              f"buckets={st['bucket_count']}")
+        for uid, logits in sorted(out["outputs"].items()):
+            print(f"  uid {uid}: top-1 class {int(np.argmax(logits))}")
+
+
+if __name__ == "__main__":
+    main()

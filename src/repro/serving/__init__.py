@@ -1,16 +1,26 @@
 """Layered serving API.
 
-``Scheduler`` (admission policy) / ``KVCacheManager`` (per-slot cache
-state) / ``ModelRunner`` (jitted steps + compile cache) compose into
+LM path: ``Scheduler`` (admission policy) / ``KVCacheManager`` (per-slot
+cache state) / ``ModelRunner`` (jitted steps + compile cache) compose into
 ``ServeEngine``; ``prune_kv_caches`` is the standalone KV compaction.
+
+Vision path: the same ``Scheduler`` + ``RaggedBatcher`` (token-count
+bucketing) + ``core.packed_runner.PackedVitSegments`` compose into
+``VisionEngine`` — continuous-batching inference for the packed,
+simultaneously-pruned ViT.
 """
 from repro.serving.cache_manager import (KVCacheManager, bucket_length,
                                          prune_kv_caches)
 from repro.serving.engine import (ElasticContext, EngineConfig, Request,
                                   ServeEngine)
+from repro.serving.ragged_batcher import RaggedBatcher, Tile
 from repro.serving.runner import ModelRunner, build_padded_batch
 from repro.serving.scheduler import Scheduler
+from repro.serving.vision import (VisionEngine, VisionEngineConfig,
+                                  VisionRequest)
 
 __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
            "Scheduler", "KVCacheManager", "ModelRunner", "prune_kv_caches",
-           "bucket_length", "build_padded_batch"]
+           "bucket_length", "build_padded_batch",
+           "VisionEngine", "VisionEngineConfig", "VisionRequest",
+           "RaggedBatcher", "Tile"]

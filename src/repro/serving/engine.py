@@ -82,6 +82,9 @@ class Request:
     max_new_tokens: int = 16
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    prune_load: Optional[float] = None  # predicted post-prune token load
+    # (set at submit when KV pruning is on; the prune_pressure_aware
+    # admission policy reads it — see serving.scheduler)
 
 
 @dataclasses.dataclass
@@ -181,6 +184,7 @@ class ServeEngine:
     # -- public API --------------------------------------------------------
     def serve(self, requests: List[Request],
               continuous: bool = False) -> Dict[int, List[int]]:
+        self._annotate_prune_load(requests)
         if continuous:
             return self._serve_continuous(requests)
         out: Dict[int, List[int]] = {}
@@ -199,6 +203,16 @@ class ServeEngine:
             "jit_compile_count": self.runner.jit_compile_count(),
             "prune_events": self.cache.prune_events,
         }
+
+    def _annotate_prune_load(self, requests: List[Request]) -> None:
+        """Predicted post-prune token load for the prune_pressure_aware
+        admission policy: the request's KV footprint (prompt + generation)
+        discounted by the dynamic KV-prune keep rate. Engines own this
+        prediction so the Scheduler stays model-agnostic."""
+        keep = self.ec.kv_prune_keep if self.ec.kv_prune_interval else 1.0
+        for r in requests:
+            if getattr(r, "prune_load", None) is None:
+                r.prune_load = (len(r.prompt) + r.max_new_tokens) * keep
 
     # -- static-wave path --------------------------------------------------
     def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:

@@ -10,29 +10,72 @@ through it, so they emit one unified event stream:
     ("retire",  uid)    request finished, slot freed
     ("degrade", desc)   elastic event observed mid-stream (mesh shrank)
 
-Admission order is policy-pluggable: pass ``policy="fifo"`` (default) or a
-callable ``policy(waiting: Sequence[Request]) -> int`` returning the index
-of the next request to admit — e.g. shortest-prompt-first for latency-aware
-token-pruning experiments (HeatViT/SPViT motivate keeping such policy out
-of the execution loop).
+Admission order is policy-pluggable: pass ``policy="fifo"`` (default), one
+of the latency-aware built-ins below, or a callable
+``policy(waiting: Sequence[Request]) -> int`` returning the index of the
+next request to admit. The built-ins are shared by BOTH serve paths (LM
+``ServeEngine`` and vision ``VisionEngine``) — they read request size
+duck-typed (``prompt`` tokens or ``patches`` rows):
+
+* ``"fifo"``                  — arrival order.
+* ``"shortest_prompt_first"`` — smallest request first (SJF): minimizes
+  mean latency under skewed sizes; ties stay FIFO.
+* ``"prune_pressure_aware"``  — prefer the request with the lowest
+  *predicted post-prune token load* (``req.prune_load``, set at submit:
+  the TDM token-count trajectory for vision, the KV-prune-discounted
+  footprint for LMs). HeatViT/SPViT motivate scheduling on the pruned
+  load, not the raw size — a heavily-pruned large image is cheaper than a
+  lightly-pruned medium one.
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
 
-# Request lives in engine.py (public API compat); import lazily to avoid a
-# cycle — the annotation below is intentionally loose.
+# Request lives in engine.py / vision.py (public API compat); import lazily
+# to avoid a cycle — the annotation below is intentionally loose.
 Request = Any
 
 PolicyFn = Callable[[Sequence[Request]], int]
+
+
+def request_tokens(req: Request) -> float:
+    """Duck-typed request size: LM prompt tokens, or vision patch rows
+    (+CLS). The latency-aware policies rank on this."""
+    prompt = getattr(req, "prompt", None)
+    if prompt is not None:
+        return float(len(prompt))
+    patches = getattr(req, "patches", None)
+    if patches is not None:
+        return float(patches.shape[0] + 1)
+    return 0.0
+
+
+def predicted_prune_load(req: Request) -> float:
+    """Predicted post-prune token load; falls back to the raw size when the
+    submitting engine didn't annotate ``prune_load``."""
+    load = getattr(req, "prune_load", None)
+    return float(load) if load is not None else request_tokens(req)
 
 
 def fifo_policy(waiting: Sequence[Request]) -> int:
     return 0
 
 
-_POLICIES: Dict[str, PolicyFn] = {"fifo": fifo_policy}
+def shortest_prompt_first(waiting: Sequence[Request]) -> int:
+    return min(range(len(waiting)), key=lambda i: request_tokens(waiting[i]))
+
+
+def prune_pressure_aware(waiting: Sequence[Request]) -> int:
+    return min(range(len(waiting)),
+               key=lambda i: predicted_prune_load(waiting[i]))
+
+
+_POLICIES: Dict[str, PolicyFn] = {
+    "fifo": fifo_policy,
+    "shortest_prompt_first": shortest_prompt_first,
+    "prune_pressure_aware": prune_pressure_aware,
+}
 
 
 class Scheduler:
@@ -42,8 +85,12 @@ class Scheduler:
         if num_slots <= 0:
             raise ValueError(f"num_slots must be positive, got {num_slots}")
         self.num_slots = num_slots
-        self.policy: PolicyFn = (_POLICIES[policy]
-                                 if isinstance(policy, str) else policy)
+        if isinstance(policy, str):
+            if policy not in _POLICIES:
+                raise ValueError(f"unknown policy {policy!r}; built-ins: "
+                                 f"{sorted(_POLICIES)}")
+            policy = _POLICIES[policy]
+        self.policy: PolicyFn = policy
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}   # slot -> request
         self.events: List[Tuple[str, Any]] = []

@@ -1,0 +1,299 @@
+"""VisionEngine — continuous-batching inference for the packed, pruned ViT.
+
+The paper's headline system claim is an accelerator that *serves* the
+simultaneously-pruned ViT: multi-level parallelism plus load balancing for
+the irregular work left by block-pruned weights and on-the-fly token
+pruning. This engine is the software twin of that serving layer:
+
+* Admission rides the same ``Scheduler`` as the LM path (one unified
+  admit/retire/degrade event stream, policy-pluggable — FIFO,
+  shortest-prompt-first, prune-pressure-aware).
+* Execution walks the per-stage segmentation of ``forward_vit_packed``
+  (``core.packed_runner.vit_segments``): prune boundaries are batching
+  boundaries. Each engine step advances every in-flight image one segment.
+* Between segments the ``RaggedBatcher`` regroups the live population —
+  whose token counts diverge at every TDM layer — into dense token-count
+  buckets so the SBMM/attention kernels always see rectangular tiles, with
+  jit recompiles bounded by the bucket set.
+
+Bit-exactness: in the default ``balanced`` mode with ``token_tile=1``,
+buckets hold requests at *identical* token counts, the batch dimension is
+padded with don't-care rows (rows are computationally independent), and the
+jitted segment bodies are the same pure functions the offline
+single-request path composes — so every request's logits are bit-exact
+against ``forward_vit_packed`` regardless of batch composition
+(tests/test_vision_engine.py). ``token_tile > 1`` and ``naive`` mode
+token-pad rows inside masked kernels: same math, FP reduction order may
+differ.
+
+Requests may carry per-request keep rates (``r_t``) and arbitrary patch
+counts (images of different resolutions) — both are sources of raggedness;
+``arrival_step`` staggers admission so the population mixes stages, the
+continuous-batching scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packed_runner as PR
+from repro.serving.ragged_batcher import RaggedBatcher
+from repro.serving.scheduler import Scheduler
+
+__all__ = ["VisionRequest", "VisionEngineConfig", "VisionEngine"]
+
+
+@dataclasses.dataclass
+class VisionRequest:
+    uid: int
+    patches: np.ndarray              # [n_patches, patch²·3] float32
+    r_t: Optional[float] = None      # per-request TDM keep rate (None = cfg)
+    arrival_step: int = 0            # engine step at which it may be admitted
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+    prune_load: Optional[float] = None   # predicted post-prune token load
+    # (sum of the per-segment token counts; set at submit — the
+    # prune_pressure_aware admission policy reads it)
+
+    @property
+    def n_patches(self) -> int:
+        return int(self.patches.shape[0])
+
+
+@dataclasses.dataclass
+class VisionEngineConfig:
+    max_batch: int = 8        # in-flight image slots
+    token_tile: int = 1       # bucket quantization (1 = exact, bit-exact)
+    mode: str = "balanced"    # 'balanced' buckets | 'naive' pad-to-max
+    use_tdm: Optional[bool] = None   # None = cfg.pruning.token_pruning_enabled
+
+    def __post_init__(self):
+        if self.max_batch <= 0:
+            raise ValueError(f"VisionEngineConfig.max_batch must be a "
+                             f"positive slot count, got {self.max_batch}")
+        if self.token_tile <= 0:
+            raise ValueError(f"VisionEngineConfig.token_tile must be "
+                             f"positive, got {self.token_tile}")
+        if self.mode not in ("balanced", "naive"):
+            raise ValueError(f"VisionEngineConfig.mode must be 'balanced' "
+                             f"or 'naive', got {self.mode!r}")
+
+
+@dataclasses.dataclass
+class _Live:
+    """Per-slot in-flight state: the request, its current activation
+    (unpadded — padding is a per-tile concern) and where it is in the
+    segment plan."""
+    req: VisionRequest
+    seg_idx: int
+    x: Any               # patches (pre-embed) or [n_tokens, D] activations
+    n_tokens: int        # real rows of x (grouping key)
+    r_t: float
+
+
+class VisionEngine:
+    """Single-host reference engine for packed-ViT serving. Exposes the
+    layers as ``.scheduler`` / ``.batcher`` / ``.segments`` for tests,
+    policies, and telemetry (mirroring ``ServeEngine``'s three layers)."""
+
+    def __init__(self, cfg: ModelConfig, params: Dict, packed: Dict,
+                 vc: Optional[VisionEngineConfig] = None,
+                 policy: "str | Callable" = "fifo"):
+        if cfg.family != "vit":
+            raise ValueError(f"VisionEngine serves the 'vit' family, "
+                             f"got {cfg.family!r}")
+        self.cfg = cfg
+        self.vc = vc if vc is not None else VisionEngineConfig()
+        self.segments = PR.PackedVitSegments(cfg, params, packed,
+                                             use_tdm=self.vc.use_tdm)
+        self.scheduler = Scheduler(self.vc.max_batch, policy=policy)
+        self.batcher = RaggedBatcher(token_tile=self.vc.token_tile,
+                                     mode=self.vc.mode,
+                                     max_batch=self.vc.max_batch)
+        self._live: Dict[int, _Live] = {}   # slot -> state
+        # not-yet-arrived requests as (absolute arrival step, request):
+        # arrival_step is relative to the serve() call that submitted it,
+        # so identical request streams replay identically (warmup == run)
+        self._pending: List[Any] = []
+        self.steps = 0
+        self.images_served = 0
+        self._n_patches_max = (cfg.image_size // cfg.patch_size) ** 2
+        self._use_tdm = (cfg.pruning.token_pruning_enabled
+                         if self.vc.use_tdm is None else self.vc.use_tdm)
+
+    @classmethod
+    def from_pruned(cls, cfg: ModelConfig, params: Dict, scores: Dict,
+                    vc: Optional[VisionEngineConfig] = None,
+                    policy: "str | Callable" = "fifo") -> "VisionEngine":
+        """Harden the pruning and build the engine: masks the dense params
+        (the DBMM path) and SBMM-packs the attention weights."""
+        from repro.models import pruning_glue as PG
+        masked = PG.apply_pruning(cfg, params, scores)
+        packed = PR.pack_model(cfg, params, scores)
+        return cls(cfg, masked, packed, vc=vc, policy=policy)
+
+    # -- events / compat ---------------------------------------------------
+    @property
+    def events(self):
+        return self.scheduler.events
+
+    # -- public API --------------------------------------------------------
+    def serve(self, requests: Sequence[VisionRequest]
+              ) -> Dict[int, np.ndarray]:
+        """Serve ``requests`` to completion; returns {uid: logits}. Requests
+        with ``arrival_step > 0`` join the waiting queue only once the
+        engine has taken that many steps (staggered admission — the
+        continuous-batching scenario)."""
+        base = self.steps
+        for r in requests:  # validate ALL before enqueueing ANY: a bad
+            self._validate(r)  # request must not leak its siblings into
+        for r in requests:     # the engine (they'd surface next serve())
+            if r.prune_load is None:
+                traj = PR.token_trajectory(
+                    self.cfg, r.n_patches,
+                    r_t=r.r_t, use_tdm=self._use_tdm)
+                r.prune_load = float(sum(traj))
+            self._pending.append((base + r.arrival_step, r))
+        self._pending.sort(key=lambda ar: ar[0])
+        out: Dict[int, np.ndarray] = {}
+        while self._pending or self.scheduler.has_work():
+            self._admit_arrivals()
+            self.scheduler.schedule()
+            self._sync_admissions()
+            if not self._live:
+                # nothing admitted yet (future arrivals): advance time
+                self.steps += 1
+                continue
+            self.step(out)
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "images_served": self.images_served,
+            "steps": self.steps,
+            "admissions": self.scheduler.num_admissions,
+            "compile_count": self.segments.compile_count,
+            "jit_compile_count": self.segments.jit_compile_count(),
+            "bucket_count": self.batcher.bucket_count,
+            **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
+        }
+
+    # -- engine internals --------------------------------------------------
+    def _validate(self, r: VisionRequest) -> None:
+        n = r.n_patches
+        if not 1 <= n <= self._n_patches_max:
+            raise ValueError(
+                f"request {r.uid}: {n} patches outside "
+                f"[1, {self._n_patches_max}] (pos-table capacity for "
+                f"image_size={self.cfg.image_size}, "
+                f"patch_size={self.cfg.patch_size})")
+        pdim = self.cfg.patch_size ** 2 * 3
+        if r.patches.shape[-1] != pdim:
+            raise ValueError(f"request {r.uid}: patch dim "
+                             f"{r.patches.shape[-1]} != {pdim}")
+        r_t = self.cfg.pruning.r_t if r.r_t is None else r.r_t
+        if not 0.0 < r_t <= 1.0:
+            raise ValueError(f"request {r.uid}: r_t must be in (0, 1], "
+                             f"got {r_t}")
+
+    def _admit_arrivals(self) -> None:
+        arrived = [r for at, r in self._pending if at <= self.steps]
+        if arrived:
+            self._pending = [(at, r) for at, r in self._pending
+                             if at > self.steps]
+            self.scheduler.submit(arrived)
+
+    def _sync_admissions(self) -> None:
+        """Initialize in-flight state for slots the Scheduler filled."""
+        for slot, req in self.scheduler.running.items():
+            if slot in self._live:
+                continue
+            self._live[slot] = _Live(
+                req=req, seg_idx=0,
+                x=np.asarray(req.patches, np.float32),
+                n_tokens=req.n_patches,
+                r_t=self.cfg.pruning.r_t if req.r_t is None else req.r_t)
+
+    def _stage_key(self, st: _Live):
+        """Batcher grouping identity: the segment (weights + static layer
+        range) plus, at TDM segments, the static keep count — tiles must be
+        k-uniform because k is a compile-time top-k width."""
+        seg = self.segments.plan[st.seg_idx]
+        if seg[0] == "tdm":
+            return (st.seg_idx, seg, PR.tdm_keep_count(st.n_tokens, st.r_t))
+        return (st.seg_idx, seg, None)
+
+    def _token_cap(self, st: _Live) -> Optional[int]:
+        """Hard bound on the padded token tile: the embed stage indexes the
+        position table, so its tile must never quantize past the table's
+        patch capacity (later stages have no positional shape bound)."""
+        if self.segments.plan[st.seg_idx][0] == "embed":
+            return self._n_patches_max
+        return None
+
+    def step(self, out: Dict[int, np.ndarray]) -> None:
+        """Advance every in-flight image one segment: plan tiles over the
+        ragged population, run each tile, scatter results, retire finished
+        images (freeing their slots for the next admissions)."""
+        slots = sorted(self._live)
+        items = [(self._stage_key(self._live[s]), self._live[s].n_tokens,
+                  self._token_cap(self._live[s]))
+                 for s in slots]
+        tiles = self.batcher.plan(items)
+        for tile in tiles:
+            self._run_tile(tile, [slots[i] for i in tile.members])
+        self.steps += 1
+        self._retire(out)
+
+    def _run_tile(self, tile, member_slots: List[int]) -> None:
+        states = [self._live[s] for s in member_slots]
+        seg = self.segments.plan[states[0].seg_idx]
+        kind = seg[0]
+        k = self._stage_key(states[0])[2]
+
+        # stage the tile on the host: token/batch padding and the member
+        # scatter are pure data movement (no FP ops — exactness-neutral),
+        # and one host->device transfer per tile beats per-member pad/stack
+        # dispatches
+        feat = states[0].x.shape[-1]
+        batch = np.zeros((tile.b_tile, tile.n_tile, feat), np.float32)
+        for b, st in enumerate(states):
+            batch[b, : st.n_tokens] = st.x
+
+        n_valid = None
+        if tile.needs_mask and kind in ("layers", "tdm"):
+            n_valid = np.fromiter(
+                (st.n_tokens for st in states), np.int32, len(states))
+            n_valid = np.concatenate(
+                [n_valid, np.full(tile.b_tile - len(states), tile.n_tile,
+                                  np.int32)])
+        y = np.asarray(self.segments.run(seg, jnp.asarray(batch),
+                                         n_valid=n_valid, k=k))
+
+        for b, st in enumerate(states):
+            if kind == "embed":
+                st.n_tokens += 1          # + CLS
+                st.x = y[b, : st.n_tokens]
+            elif kind == "layers":
+                st.x = y[b, : st.n_tokens]
+            elif kind == "tdm":
+                st.n_tokens = k + 2       # CLS + k kept + fused
+                st.x = y[b, : st.n_tokens]
+            else:  # head
+                st.req.logits = y[b]
+            st.seg_idx += 1
+
+    def _retire(self, out: Dict[int, np.ndarray]) -> None:
+        n_segs = len(self.segments.plan)
+        for slot in sorted(self._live):
+            st = self._live[slot]
+            if st.seg_idx >= n_segs:
+                st.req.done = True
+                out[st.req.uid] = st.req.logits
+                self.scheduler.retire(slot)
+                del self._live[slot]
+                self.images_served += 1

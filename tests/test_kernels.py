@@ -135,3 +135,50 @@ def test_flash_bounded_equals_unbounded():
     a = flash_attention(q, k, v, causal=True, tq=32, tk=32, bounded=True)
     b = flash_attention(q, k, v, causal=True, tq=32, tk=32, bounded=False)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Backend selection (kernels.backend): interpret on CPU CI, compiled on
+# real TPU, env-overridable
+# ---------------------------------------------------------------------------
+def test_backend_auto_detection(monkeypatch):
+    from repro.kernels import backend
+
+    monkeypatch.delenv(backend.ENV_VAR, raising=False)
+    # this suite runs on the CPU host platform -> interpreter by default
+    assert backend.default_interpret() == (jax.default_backend() != "tpu")
+    assert backend.resolve_interpret(None) == backend.default_interpret()
+    # explicit values pass through untouched
+    assert backend.resolve_interpret(True) is True
+    assert backend.resolve_interpret(False) is False
+
+
+def test_backend_env_override(monkeypatch):
+    from repro.kernels import backend
+
+    monkeypatch.setenv(backend.ENV_VAR, "interpret")
+    assert backend.default_interpret() is True
+    monkeypatch.setenv(backend.ENV_VAR, "compiled")
+    assert backend.default_interpret() is False
+    monkeypatch.setenv(backend.ENV_VAR, "auto")
+    assert backend.default_interpret() == (jax.default_backend() != "tpu")
+    monkeypatch.setenv(backend.ENV_VAR, "sideways")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_INTERPRET"):
+        backend.default_interpret()
+
+
+def test_kernels_honor_env_interpret(monkeypatch):
+    """The non-jitted entry points resolve the env override per call (the
+    resolved value is a static jit arg, so flipping the env re-dispatches
+    instead of reusing a stale trace)."""
+    from repro.kernels import backend
+
+    monkeypatch.setenv(backend.ENV_VAR, "interpret")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    w = rng.standard_normal((32, 32)).astype(np.float32)
+    mask = np.ones(bp.score_shape(w.shape, 16), bool)
+    pw = packing.pack_weight(w, mask, 16)
+    out = sbmm(x, pw, tm=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) @ w,
+                               atol=1e-4)

@@ -1,0 +1,97 @@
+"""RaggedBatcher invariants: every plan is a partition (zero dropped
+requests) with bounded padding waste, under arbitrary per-stage keep-count
+populations — the property the vision engine's correctness rests on."""
+import pytest
+
+from repro.serving.cache_manager import bucket_length
+from repro.serving.ragged_batcher import RaggedBatcher
+
+
+def _check_partition(items, tiles):
+    """Every item index appears in exactly one tile."""
+    seen = [i for t in tiles for i in t.members]
+    assert sorted(seen) == list(range(len(items)))
+    for t in tiles:
+        assert t.n_tokens == tuple(items[i][1] for i in t.members)
+
+
+def _check_balanced_bounds(batcher, tiles):
+    for t in tiles:
+        for n in t.n_tokens:
+            assert 0 <= t.n_tile - n < batcher.token_tile  # bounded pad
+        assert len(t.members) <= t.b_tile
+        assert t.b_tile == bucket_length(
+            len(t.members), cap=batcher.max_batch or len(t.members), lo=1)
+        if batcher.max_batch is not None:
+            assert t.b_tile <= batcher.max_batch
+
+
+def test_exact_buckets_have_zero_padding():
+    b = RaggedBatcher(token_tile=1, max_batch=4)
+    items = [("s0", 17), ("s0", 17), ("s0", 10), ("s1", 17), ("s0", 5)]
+    tiles = b.plan(items)
+    _check_partition(items, tiles)
+    for t in tiles:
+        assert not t.needs_mask
+        assert t.n_tile == t.n_tokens[0]
+    # (s0,17) pair -> one 2-row tile; singles -> b_tile 1
+    by_key = {(t.stage, t.n_tile): t for t in tiles}
+    assert by_key[("s0", 17)].b_tile == 2
+    assert b.padding_waste() == 0.0
+
+
+def test_token_tile_quantizes_and_masks():
+    b = RaggedBatcher(token_tile=8, max_batch=4)
+    (t,) = b.plan([("s", 10), ("s", 14)])  # both round up to 16
+    assert t.n_tile == 16 and t.needs_mask
+    assert t.real_cells == 24 and t.padded_cells == 32
+
+
+def test_naive_pads_to_group_max_and_full_batch():
+    b = RaggedBatcher(mode="naive", max_batch=4)
+    tiles = b.plan([("s", 5), ("s", 17), ("s", 9), ("t", 3)])
+    _check_partition([("s", 5), ("s", 17), ("s", 9), ("t", 3)], tiles)
+    s_tiles = [t for t in tiles if t.stage == "s"]
+    assert len(s_tiles) == 1
+    assert s_tiles[0].n_tile == 17 and s_tiles[0].b_tile == 4
+    assert s_tiles[0].needs_mask
+
+
+def test_naive_overflow_spills_into_more_tiles():
+    b = RaggedBatcher(mode="naive", max_batch=2)
+    tiles = b.plan([("s", 4)] * 5)
+    assert [len(t.members) for t in tiles] == [2, 2, 1]
+    assert all(t.b_tile == 2 for t in tiles)
+
+
+def test_bucket_key_distinguishes_masked_tiles():
+    b = RaggedBatcher(token_tile=8, max_batch=4)
+    (full,) = b.plan([("s", 8)])      # exact: no mask
+    (padded,) = b.plan([("s", 5)])    # padded to 8: masked
+    assert full.n_tile == padded.n_tile == 8
+    assert full.bucket_key != padded.bucket_key
+    assert b.bucket_count == 2
+
+
+def test_token_cap_bounds_quantization():
+    """A per-item cap (e.g. the position-table capacity at the embed
+    stage) stops token_tile rounding from padding past a hard shape
+    bound."""
+    b = RaggedBatcher(token_tile=15, max_batch=4)
+    (t,) = b.plan([("embed", 16, 16)])
+    assert t.n_tile == 16  # would be 30 uncapped
+    (t2,) = b.plan([("embed", 7, 16)])
+    assert t2.n_tile == 15  # cap only clamps, smaller tiles still quantize
+    with pytest.raises(ValueError, match="cap"):
+        b.plan([("embed", 16, 9)])
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        RaggedBatcher(token_tile=0)
+    with pytest.raises(ValueError):
+        RaggedBatcher(mode="magic")
+    with pytest.raises(ValueError):
+        RaggedBatcher(mode="naive")  # needs max_batch
+    with pytest.raises(ValueError):
+        RaggedBatcher().plan([("s", 0)])

@@ -1,0 +1,61 @@
+"""Property-based RaggedBatcher invariants (hypothesis): any sequence of
+per-stage keep-counts bin-packs into buckets with zero dropped requests and
+bounded padding waste — the vision engine's zero-drop guarantee."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.token_pruning import num_kept_tokens  # noqa: E402
+from repro.serving.ragged_batcher import RaggedBatcher  # noqa: E402
+
+from test_ragged_batcher import (_check_balanced_bounds,  # noqa: E402
+                                 _check_partition)
+
+_fast = settings(max_examples=50, deadline=None)
+
+
+@_fast
+@given(ns=st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
+                             st.integers(1, 64)), min_size=1, max_size=40),
+       tile=st.sampled_from([1, 2, 8, 16]),
+       mode=st.sampled_from(["balanced", "naive"]),
+       max_batch=st.integers(1, 8))
+def test_plan_partitions_any_population(ns, tile, mode, max_batch):
+    """Zero dropped requests + bounded padding for arbitrary stage/count
+    populations in both modes."""
+    b = RaggedBatcher(token_tile=tile, mode=mode, max_batch=max_batch)
+    tiles = b.plan(ns)
+    _check_partition(ns, tiles)
+    if mode == "balanced":
+        _check_balanced_bounds(b, tiles)
+        # waste bound: < token_tile per row plus pow2 batch rounding -> a
+        # tile's padded area is < 2x its (real + token_tile) area
+        for t in tiles:
+            assert t.padded_cells < 2 * sum(n + tile for n in t.n_tokens)
+    else:
+        for t in tiles:
+            assert t.n_tile == max(t.n_tokens)
+            assert t.b_tile == max_batch
+
+
+@_fast
+@given(pop=st.lists(st.tuples(st.integers(2, 64),
+                              st.floats(0.05, 1.0)), min_size=1,
+                    max_size=16),
+       n_stages=st.integers(1, 4), tile=st.sampled_from([1, 4]))
+def test_keep_count_trajectories_bin_pack(pop, n_stages, tile):
+    """Any sequence of per-stage keep-counts (the TDM trajectory of a
+    (patches, r_t) population) bin-packs with zero drops at every stage."""
+    b = RaggedBatcher(token_tile=tile, max_batch=8)
+    counts = [n for n, _ in pop]
+    rates = [r for _, r in pop]
+    for stage in range(n_stages):
+        items = [(stage, n) for n in counts]
+        tiles = b.plan(items)
+        _check_partition(items, tiles)
+        _check_balanced_bounds(b, tiles)
+        counts = [num_kept_tokens(n, r) for n, r in zip(counts, rates)]
+    assert b.tiles_planned >= n_stages
+    assert b.bucket_count <= b.tiles_planned

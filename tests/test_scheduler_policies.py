@@ -1,0 +1,112 @@
+"""Latency-aware Scheduler policies (duck-typed over LM + vision requests)
+and the shared bench-artifact envelope."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import (SCHEMA_VERSION, load_bench_artifact,
+                         write_bench_artifact)
+from repro.serving.scheduler import (Scheduler, predicted_prune_load,
+                                     prune_pressure_aware, request_tokens,
+                                     shortest_prompt_first)
+
+
+@dataclasses.dataclass
+class _LM:
+    uid: int
+    prompt: np.ndarray
+    prune_load: float = None
+
+
+@dataclasses.dataclass
+class _Vision:
+    uid: int
+    patches: np.ndarray
+    prune_load: float = None
+
+
+def _lm(uid, n, load=None):
+    return _LM(uid, np.zeros(n, np.int32), load)
+
+
+def _vis(uid, n, load=None):
+    return _Vision(uid, np.zeros((n, 192), np.float32), load)
+
+
+def test_request_tokens_duck_types_both_paths():
+    assert request_tokens(_lm(0, 12)) == 12
+    assert request_tokens(_vis(0, 9)) == 10  # patches + CLS
+
+
+def test_predicted_prune_load_falls_back_to_size():
+    assert predicted_prune_load(_lm(0, 12)) == 12
+    assert predicted_prune_load(_lm(0, 12, load=3.5)) == 3.5
+
+
+def test_shortest_prompt_first_mixed_population():
+    waiting = [_lm(0, 30), _vis(1, 4), _lm(2, 8), _vis(3, 16)]
+    assert shortest_prompt_first(waiting) == 1
+    # ties stay FIFO: two equal-size requests -> earlier one
+    assert shortest_prompt_first([_lm(0, 8), _lm(1, 8)]) == 0
+
+
+def test_prune_pressure_prefers_low_post_prune_load():
+    # big-but-heavily-pruned beats small-but-unpruned
+    waiting = [_lm(0, 8), _lm(1, 40, load=4.0)]
+    assert prune_pressure_aware(waiting) == 1
+
+
+def test_scheduler_admits_in_policy_order():
+    sched = Scheduler(1, policy="shortest_prompt_first")
+    sched.submit([_lm(0, 30), _lm(1, 5), _lm(2, 12)])
+    order = []
+    while sched.waiting:
+        (slot, req), = sched.schedule()
+        order.append(req.uid)
+        sched.retire(slot)
+    assert order == [1, 2, 0]
+    assert [e[0] for e in sched.events] == ["admit", "retire"] * 3
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler(2, policy="round_robin")
+
+
+# ---------------------------------------------------------------------------
+# bench artifact envelope
+# ---------------------------------------------------------------------------
+def test_artifact_roundtrip(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    written = write_bench_artifact(
+        path, kind="vision", config={"slots": 4},
+        results={"balanced": {"images_s": 10.0}},
+        extra={"balanced_vs_naive": 1.5})
+    loaded = load_bench_artifact(path, expect_kind="vision")
+    assert loaded == json.loads(json.dumps(written))
+    assert loaded["schema_version"] == SCHEMA_VERSION
+    assert loaded["balanced_vs_naive"] == 1.5
+
+
+def test_artifact_rejects_reserved_extra(tmp_path):
+    with pytest.raises(ValueError, match="collides"):
+        write_bench_artifact(str(tmp_path / "b.json"), "serving", {}, {},
+                             extra={"results": {}})
+
+
+def test_artifact_load_validates(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"kind": "serving"}))
+    with pytest.raises(ValueError, match="missing"):
+        load_bench_artifact(str(bad))
+    path = str(tmp_path / "v.json")
+    write_bench_artifact(path, "serving", {}, {})
+    with pytest.raises(ValueError, match="kind"):
+        load_bench_artifact(path, expect_kind="vision")
+    wrong = json.load(open(path))
+    wrong["schema_version"] = 999
+    (tmp_path / "w.json").write_text(json.dumps(wrong))
+    with pytest.raises(ValueError, match="schema_version"):
+        load_bench_artifact(str(tmp_path / "w.json"))

@@ -1,0 +1,240 @@
+"""VisionEngine: bit-exact ragged-batch serving of the packed ViT.
+
+The acceptance property of the vision serving subsystem: for every request
+in a mixed continuous batch (mixed resolutions, mixed per-request keep
+rates, staggered arrivals), the served logits are BIT-EXACT against the
+single-request offline ``forward_vit_packed`` — and jit recompiles stay
+within the ragged batcher's bucket set."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DEIT_SMALL
+from repro.core import packed_runner as PR
+from repro.models import model as M
+from repro.models import pruning_glue as PG
+from repro.serving import (Request, ServeEngine, EngineConfig,
+                           VisionEngine, VisionEngineConfig, VisionRequest)
+
+
+@pytest.fixture(scope="module")
+def packed_vit(rng_key):
+    cfg = DEIT_SMALL.reduced()
+    params = M.init_params(cfg, rng_key)
+    scores = PG.init_scores(cfg, params, jax.random.fold_in(rng_key, 7))
+    masked = PG.apply_pruning(cfg, params, scores)
+    packed = PR.pack_model(cfg, params, scores)
+    return cfg, masked, packed
+
+
+def _mixed_requests(cfg, mixes):
+    rng = np.random.default_rng(0)
+    pdim = cfg.patch_size ** 2 * 3
+    return [VisionRequest(
+        uid=i, patches=rng.standard_normal((n, pdim)).astype(np.float32),
+        r_t=r_t, arrival_step=arr)
+        for i, (n, r_t, arr) in enumerate(mixes)]
+
+
+def _offline(cfg, masked, packed, req, segments=None):
+    c = cfg if req.r_t is None else cfg.replace(
+        pruning=dataclasses.replace(cfg.pruning, r_t=req.r_t))
+    return np.asarray(PR.forward_vit_packed(
+        c, masked, packed, req.patches[None], segments=segments).logits[0])
+
+
+def test_mixed_batch_bitexact_and_bounded_recompiles(packed_vit):
+    """Mixed sizes + keep rates + staggered arrivals through 3 slots: every
+    logit vector bit-exact vs the offline path; recompiles <= buckets; one
+    unified admit/retire event stream."""
+    cfg, masked, packed = packed_vit
+    reqs = _mixed_requests(cfg, [(16, None, 0), (9, 0.5, 0), (4, 0.7, 1),
+                                 (16, 0.5, 2), (9, None, 3), (4, 0.5, 3)])
+    eng = VisionEngine(cfg, masked, packed, VisionEngineConfig(max_batch=3))
+    out = eng.serve(reqs)
+    assert sorted(out) == [r.uid for r in reqs]
+
+    # recompile discipline: check BEFORE the reference runs below add
+    # their own (B=1) shapes to the shared executor's caches
+    st = eng.stats()
+    assert st["jit_compile_count"] <= st["bucket_count"]
+    assert st["batcher_padding_waste"] == 0.0  # token_tile=1: exact tiles
+
+    # unified event stream (same shape as the LM path's)
+    admits = [uid for kind, uid in eng.events if kind == "admit"]
+    retires = [uid for kind, uid in eng.events if kind == "retire"]
+    assert sorted(admits) == sorted(retires) == [r.uid for r in reqs]
+
+    for r in reqs:
+        ref = _offline(cfg, masked, packed, r, segments=eng.segments)
+        assert np.array_equal(ref, out[r.uid]), (
+            f"uid {r.uid}: batched serving changed the logits")
+        assert r.done and r.logits is not None
+
+
+def test_batch_composition_invariance(packed_vit):
+    """The same request served alone and in a different mix produces the
+    same bits (batch composition independence)."""
+    cfg, masked, packed = packed_vit
+    probe = _mixed_requests(cfg, [(9, 0.5, 0)])[0]
+
+    def fresh(u):
+        return VisionRequest(uid=u, patches=probe.patches.copy(), r_t=0.5)
+
+    solo = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(max_batch=1))
+    out_solo = solo.serve([fresh(0)])
+    crowd_reqs = [fresh(7)] + _mixed_requests(
+        cfg, [(16, None, 0), (4, 0.7, 0), (9, 0.7, 1)])
+    crowd = VisionEngine(cfg, masked, packed,
+                         VisionEngineConfig(max_batch=4))
+    out_crowd = crowd.serve(crowd_reqs)
+    assert np.array_equal(out_solo[0], out_crowd[7])
+
+
+def test_padded_modes_serve_everyone_close(packed_vit):
+    """token_tile > 1 and naive padding run masked kernels: same math,
+    different FP reduction order — allclose, all requests served, bound
+    still holds."""
+    cfg, masked, packed = packed_vit
+    mixes = [(16, None, 0), (9, 0.5, 0), (4, 0.7, 1), (13, 0.5, 1)]
+    for vc in (VisionEngineConfig(max_batch=2, token_tile=8),
+               VisionEngineConfig(max_batch=2, mode="naive")):
+        eng = VisionEngine(cfg, masked, packed, vc)
+        reqs = _mixed_requests(cfg, mixes)
+        out = eng.serve(reqs)
+        assert sorted(out) == [r.uid for r in reqs]
+        st = eng.stats()
+        assert st["jit_compile_count"] <= st["bucket_count"]
+        for r in reqs:
+            ref = _offline(cfg, masked, packed, r)
+            np.testing.assert_allclose(ref, out[r.uid], atol=1e-5,
+                                       rtol=1e-5)
+
+
+def test_admission_policies_order_vision_requests(packed_vit):
+    """shortest_prompt_first admits small images first;
+    prune_pressure_aware admits by predicted post-prune token load — a
+    heavily-pruned large image can overtake a lightly-pruned medium one."""
+    cfg, masked, packed = packed_vit
+    # uid 0: 16 patches r_t=0.1 (heavy pruning), uid 1: 16 patches r_t=1.0,
+    # uid 2: 9 patches r_t=1.0, uid 3: 4 patches r_t=1.0
+    mixes = [(16, 0.1, 0), (16, 1.0, 0), (9, 1.0, 0), (4, 1.0, 0)]
+
+    def admit_order(policy):
+        eng = VisionEngine(cfg, masked, packed,
+                           VisionEngineConfig(max_batch=1), policy=policy)
+        eng.serve(_mixed_requests(cfg, mixes))
+        return [uid for kind, uid in eng.events if kind == "admit"]
+
+    assert admit_order("fifo") == [0, 1, 2, 3]
+    assert admit_order("shortest_prompt_first") == [3, 2, 0, 1]
+    loads = {r.uid: r.prune_load
+             for r in _annotated(cfg, masked, packed, mixes)}
+    expected = sorted(loads, key=lambda u: loads[u])
+    assert admit_order("prune_pressure_aware") == expected
+    # the heavily-pruned large image must overtake the unpruned one
+    assert expected.index(0) < expected.index(1)
+
+
+def _annotated(cfg, masked, packed, mixes):
+    reqs = _mixed_requests(cfg, mixes)
+    for r in reqs:
+        r.prune_load = float(sum(PR.token_trajectory(
+            cfg, r.n_patches, r_t=r.r_t)))
+    return reqs
+
+
+def test_lm_requests_get_prune_load_annotation(rng_key):
+    """The LM ServeEngine annotates prune_load (KV-prune-discounted
+    footprint) so prune_pressure_aware is meaningful on both paths."""
+    from repro.configs import get_config
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, rng_key)
+    ec = EngineConfig(max_batch=2, max_len=64, kv_prune_interval=4,
+                      kv_prune_keep=0.5)
+    eng = ServeEngine(cfg, params, ec)
+    reqs = [Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                    max_new_tokens=6)]
+    eng._annotate_prune_load(reqs)
+    assert reqs[0].prune_load == pytest.approx((10 + 6) * 0.5)
+    # disabled pruning -> undiscounted footprint
+    eng2 = ServeEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+    reqs2 = [Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                     max_new_tokens=6)]
+    eng2._annotate_prune_load(reqs2)
+    assert reqs2[0].prune_load == pytest.approx(16.0)
+
+
+def test_validation_and_config_errors(packed_vit):
+    cfg, masked, packed = packed_vit
+    pdim = cfg.patch_size ** 2 * 3
+    eng = VisionEngine(cfg, masked, packed)
+    with pytest.raises(ValueError, match="patches outside"):
+        eng.serve([VisionRequest(uid=0, patches=np.zeros((99, pdim),
+                                                         np.float32))])
+    with pytest.raises(ValueError, match="patch dim"):
+        eng.serve([VisionRequest(uid=0, patches=np.zeros((4, 7),
+                                                         np.float32))])
+    with pytest.raises(ValueError, match="r_t"):
+        eng.serve([VisionRequest(uid=0, patches=np.zeros((4, pdim),
+                                                         np.float32),
+                                 r_t=1.5)])
+    with pytest.raises(ValueError):
+        VisionEngineConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        VisionEngineConfig(token_tile=0)
+    with pytest.raises(ValueError):
+        VisionEngineConfig(mode="magic")
+    with pytest.raises(ValueError, match="family"):
+        VisionEngine(DEIT_SMALL.reduced().replace(family="dense"),
+                     masked, packed)
+    with pytest.raises(ValueError, match="unknown policy"):
+        VisionEngine(cfg, masked, packed, policy="best_effort")
+
+
+def test_invalid_request_does_not_leak_siblings(packed_vit):
+    """A serve() that raises on one request must not enqueue the others —
+    they would silently surface in the next serve()'s results."""
+    cfg, masked, packed = packed_vit
+    pdim = cfg.patch_size ** 2 * 3
+    eng = VisionEngine(cfg, masked, packed, VisionEngineConfig(max_batch=2))
+    good = _mixed_requests(cfg, [(4, 0.5, 0)])[0]
+    bad = VisionRequest(uid=9, patches=np.zeros((4, 7), np.float32))
+    with pytest.raises(ValueError, match="patch dim"):
+        eng.serve([good, bad])
+    other = _mixed_requests(cfg, [(4, 0.5, 0)])[0]
+    other.uid = 5
+    out = eng.serve([other])
+    assert sorted(out) == [5]  # `good` must NOT ride along
+
+
+def test_large_token_tile_respects_pos_table(packed_vit):
+    """token_tile rounding must clamp at the position-table capacity: a
+    full-resolution image under a coarse tile previously crashed the embed
+    stage with a broadcast error."""
+    cfg, masked, packed = packed_vit
+    eng = VisionEngine(cfg, masked, packed,
+                       VisionEngineConfig(max_batch=2, token_tile=15))
+    reqs = _mixed_requests(cfg, [(16, None, 0), (4, 0.5, 0)])
+    out = eng.serve(reqs)
+    assert sorted(out) == [0, 1]
+    for r in reqs:
+        ref = _offline(cfg, masked, packed, r)
+        np.testing.assert_allclose(ref, out[r.uid], atol=1e-5, rtol=1e-5)
+
+
+def test_from_pruned_builds_serving_engine(rng_key):
+    cfg = DEIT_SMALL.reduced()
+    params = M.init_params(cfg, rng_key)
+    scores = PG.init_scores(cfg, params, jax.random.fold_in(rng_key, 7))
+    eng = VisionEngine.from_pruned(cfg, params, scores,
+                                   vc=VisionEngineConfig(max_batch=2))
+    reqs = _mixed_requests(cfg, [(16, None, 0), (9, 0.5, 0)])
+    out = eng.serve(reqs)
+    assert sorted(out) == [0, 1]
+    for lg in out.values():
+        assert lg.shape == (cfg.num_classes,)
+        assert np.isfinite(lg).all()
