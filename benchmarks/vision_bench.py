@@ -1,31 +1,44 @@
-"""Naive padded batching vs load-balanced ragged bucketing for ViT serving.
+"""Execution planning for ragged ViT serving: naive padding vs balanced
+bucketing vs the cost-model-driven TilePlanner.
 
 The packed ViT's token pruning leaves the in-flight population ragged:
 images enter at different resolutions and shed tokens at every TDM layer at
-their own keep rates. This bench serves an identical mixed request stream
-through the ``VisionEngine`` under both batching strategies:
+their own keep rates. This bench serves identical request streams through
+the ``VisionEngine`` under the batching/planning strategies, over two
+scenarios:
 
-* ``naive``    — per segment, one tile padded to the largest member's token
-  count and to the full slot width (the classic padded batch). Small
-  images pay the largest image's quadratic attention cost.
-* ``balanced`` — the ``RaggedBatcher`` regroups into dense token-count
-  buckets (the software twin of the paper's load balancing across PE
-  lanes); with ``token_tile=1`` results are additionally bit-exact against
-  the single-request offline path.
+* ``mixed``  — the PR-4 workload: skewed resolution mix, dense arrivals.
+  Modes: ``naive`` (pad-to-max batch), ``balanced`` (RaggedBatcher exact
+  buckets, planner off), ``planned`` (TilePlanner — ``--planner`` selects
+  merge/fuse/full; ``off`` makes this an A/A control).
+* ``sparse`` — singleton-heavy: every request has a distinct patch count
+  and arrivals are spread out, so buckets almost never batch and the
+  balanced path pays one dispatch per segment per image. This is the
+  express-lane case: the planner fuses each bucket-singleton's remaining
+  trajectory into ONE jitted program. Modes: ``balanced`` vs ``planned``.
+
+Before the timed windows (full runs), the bench calibrates the planner's
+``TileCostModel`` from measured dispatch timings
+(``TileCostModel.calibrate``), so merge decisions trade measured host
+dispatch overhead against modeled padding cost instead of the FPGA-era
+default constant.
 
 Reported per mode: throughput (images/s and token·segment cells/s), padding
-waste, and the two compile-discipline columns (distinct buckets planned vs
-jit compiles actually paid — the engine's recompile bound).
+waste, the recompile-discipline columns (jit compiles vs the bucket ∪
+trajectory budget), and the plan-stats columns (merge count, fused-lane
+count, deadline dispatches, modeled saving).
 
-    PYTHONPATH=src python benchmarks/vision_bench.py            # full
-    PYTHONPATH=src python benchmarks/vision_bench.py --smoke    # CI lane
+    PYTHONPATH=src python benchmarks/vision_bench.py                # full
+    PYTHONPATH=src python benchmarks/vision_bench.py --smoke        # CI lane
+    PYTHONPATH=src python benchmarks/vision_bench.py --smoke --planner off
 
 A ``BENCH_vision.json`` artifact is written through the schema-versioned
 ``repro.bench`` envelope shared with serving_bench.py (``--out``
 overrides). Exit is non-zero if any mode fails to serve every request or
-exceeds its recompile bound; the full run additionally requires balanced
-bucketing to beat naive padding in throughput (the paper's load-balancing
-claim, acceptance-tested here).
+exceeds its recompile budget; the full run additionally requires balanced
+bucketing to beat naive padding, ``--planner full`` to be at least as fast
+as balanced on the mixed workload, and strictly faster on the sparse
+singleton-heavy scenario (the planner's acceptance claims).
 """
 from __future__ import annotations
 
@@ -34,9 +47,15 @@ import sys
 import time
 
 
-def make_requests(cfg, num: int, arrival_spread: int, seed: int):
+def make_requests(cfg, num: int, arrival_spread: int, seed: int,
+                  unique_sizes: bool = False):
     from repro.launch.serve_vision import make_requests as _mk
 
+    if unique_sizes:
+        # the sparse scenario: every patch count distinct -> every bucket a
+        # singleton; arrivals spread so the population stays thin
+        return _mk(cfg, num, arrival_spread, seed,
+                   r_ts=[0.5, cfg.pruning.r_t], unique_sizes=True)
     # the launcher's stream generator, skewed toward small images (the
     # realistic mix where naive padding hurts: most requests pay the
     # largest in-flight image's cost)
@@ -45,22 +64,90 @@ def make_requests(cfg, num: int, arrival_spread: int, seed: int):
                size_weights=[0.5, 0.3, 0.2])
 
 
-MODES = (
-    # (name, batcher mode, token_tile)
-    ("naive", "naive", 1),
-    ("balanced", "balanced", 1),
-)
+def calibrate_cost_model(cfg, masked, packed, cost_model, seed: int,
+                         reps: int = 3):
+    """Fit the cost model's dispatch-overhead constant and cycle->seconds
+    scale from measured wall-clock dispatch timings (the satellite hook:
+    ``TileCostModel.calibrate``). Probes a jitted encoder segment at two
+    batch widths on a THROWAWAY executor so the serving engines' compile
+    ledgers stay untouched."""
+    import jax
+    import numpy as np
+
+    from repro.core import packed_runner as PR
+    from repro.serving import Tile
+
+    probe = PR.PackedVitSegments(cfg, masked, packed)
+    seg = next(s for s in probe.plan if s[0] == "layers")
+    si = probe.plan.index(seg)
+    rng = np.random.default_rng(seed)
+    n = 16
+    samples = []
+    for b in (1, 8):
+        x = rng.standard_normal((b, n, cfg.d_model)).astype(np.float32)
+        jax.block_until_ready(probe.run(seg, x))  # compile outside timing
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(probe.run(seg, x))
+            times.append(time.perf_counter() - t0)
+        tile = Tile(stage=(si, seg, None), members=tuple(range(b)),
+                    n_tokens=(n,) * b, n_tile=n, b_tile=b)
+        samples.append((cost_model.tile_work_cycles(tile), min(times)))
+    return cost_model.calibrate(samples)
+
+
+def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
+             bmode: str, planner: str):
+    """Serve the stream twice (warmup compiles every shape on the identical
+    stream — arrival dynamics replay exactly) and time the second pass."""
+    from repro.serving import VisionEngine, VisionEngineConfig
+
+    vc = VisionEngineConfig(max_batch=slots, mode=bmode, token_tile=1,
+                            planner=planner)
+    engine = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model)
+    engine.serve(reqs_factory())
+    warm = engine.stats()
+    reqs = reqs_factory()
+    t0 = time.time()
+    out = engine.serve(reqs)
+    dt = time.time() - t0
+    st = engine.stats()
+    real = (st["batcher_real_cells"] - warm["batcher_real_cells"]
+            + st["plan_lane_cells"] - warm["plan_lane_cells"])
+    return {
+        "seconds": dt,
+        "images_s": len(out) / dt,
+        "cells_s": real / dt,
+        "served": len(out), "expected": len(reqs),
+        "padding_waste": st["batcher_padding_waste"],
+        "buckets": st["bucket_count"],
+        "trajectories": st["trajectory_count"],
+        "compile_budget": st["compile_budget"],
+        "jit_compiles": st["jit_compile_count"],
+        "recompile_bound_ok":
+            st["jit_compile_count"] <= st["compile_budget"],
+        # plan-stats columns (schema: vision kind, v1 envelope)
+        "planner": st["plan_mode"],
+        "merge_count": st["plan_merges"],
+        "fused_lane_count": st["plan_lanes"],
+        "fused_segments": st["plan_fused_segments"],
+        "deadline_dispatches": st["plan_deadline_urgent"],
+        "modeled_saving_ms": st["plan_modeled_saving_ms"],
+        "calibrated": st["plan_calibrated"],
+    }
 
 
 def bench(arch: str, num: int, slots: int, arrival_spread: int,
-          image_size: int, d_model: int, seed: int):
+          image_size: int, d_model: int, seed: int, planner: str,
+          calibrate: bool):
     import jax
 
     from repro.configs import get_config
     from repro.core import packed_runner as PR
     from repro.models import model as M
     from repro.models import pruning_glue as PG
-    from repro.serving import VisionEngine, VisionEngineConfig
+    from repro.serving import TileCostModel
 
     # reduced() shrinks depth/width for CPU; image_size and d_model set
     # the per-cell compute — big enough that cell count (not dispatch
@@ -75,33 +162,26 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
     masked = PG.apply_pruning(cfg, params, scores)
     packed = PR.pack_model(cfg, params, scores)
 
-    results = {}
-    for mode, bmode, tile in MODES:
-        vc = VisionEngineConfig(max_batch=slots, mode=bmode,
-                                token_tile=tile)
-        engine = VisionEngine(cfg, masked, packed, vc)
-        # warmup on the IDENTICAL stream: arrival dynamics replay exactly,
-        # so every tile shape compiles outside the timed window
-        engine.serve(make_requests(cfg, num, arrival_spread, seed))
-        warm = engine.stats()
-        reqs = make_requests(cfg, num, arrival_spread, seed)
-        t0 = time.time()
-        out = engine.serve(reqs)
-        dt = time.time() - t0
-        st = engine.stats()
-        real = st["batcher_real_cells"] - warm["batcher_real_cells"]
-        results[mode] = {
-            "seconds": dt,
-            "images_s": len(out) / dt,
-            "cells_s": real / dt,
-            "served": len(out), "expected": num,
-            "padding_waste": st["batcher_padding_waste"],
-            "buckets": st["bucket_count"],
-            "jit_compiles": st["jit_compile_count"],
-            "recompile_bound_ok":
-                st["jit_compile_count"] <= st["bucket_count"],
-        }
-    return results
+    cost_model = TileCostModel(cfg)
+    fit = None
+    if calibrate:
+        fit = calibrate_cost_model(cfg, masked, packed, cost_model, seed)
+
+    mixed = lambda: make_requests(cfg, num, arrival_spread, seed)
+    sparse = lambda: make_requests(cfg, num, max(2 * num, arrival_spread),
+                                   seed + 1, unique_sizes=True)
+    results = {"mixed": {}, "sparse": {}}
+    for mode, bmode, pmode in (("naive", "naive", "off"),
+                               ("balanced", "balanced", "off"),
+                               ("planned", "balanced", planner)):
+        results["mixed"][mode] = run_mode(
+            cfg, masked, packed, cost_model, mixed,
+            slots=slots, bmode=bmode, planner=pmode)
+    for mode, pmode in (("balanced", "off"), ("planned", planner)):
+        results["sparse"][mode] = run_mode(
+            cfg, masked, packed, cost_model, sparse,
+            slots=slots, bmode="balanced", planner=pmode)
+    return results, fit
 
 
 def main():
@@ -116,49 +196,89 @@ def main():
     ap.add_argument("--d-model", type=int, default=128,
                     help="reduced-config width override (0 = keep)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--planner", default="full",
+                    choices=("off", "merge", "fuse", "full"),
+                    help="TilePlanner mode for the 'planned' arm (off = "
+                         "A/A control against balanced)")
     ap.add_argument("--out", default="BENCH_vision.json",
                     help="JSON artifact path")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale run for the CI fast lane")
+                    help="seconds-scale run for the CI fast lane (skips "
+                         "cost-model calibration and perf assertions)")
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.slots = 8, 4
         args.arrival_spread, args.image_size, args.d_model = 3, 32, 0
 
-    res = bench(args.arch, args.requests, args.slots, args.arrival_spread,
-                args.image_size, args.d_model, args.seed)
+    res, fit = bench(args.arch, args.requests, args.slots,
+                     args.arrival_spread, args.image_size, args.d_model,
+                     args.seed, args.planner, calibrate=not args.smoke)
+    if fit:
+        print(f"cost model calibrated: overhead="
+              f"{fit['dispatch_overhead_cycles']:.0f} cycles "
+              f"({fit['overhead_seconds'] * 1e6:.0f}us), "
+              f"r2={fit['r2']:.3f}")
     ok = True
-    hdr = (f"{'mode':10s} {'img/s':>8s} {'cells/s':>10s} {'served':>8s} "
-           f"{'pad waste':>10s} {'buckets':>8s} {'jit':>5s}")
+    hdr = (f"{'scenario':9s} {'mode':9s} {'img/s':>8s} {'cells/s':>10s} "
+           f"{'served':>7s} {'waste':>7s} {'jit<=budget':>11s} "
+           f"{'merges':>6s} {'lanes':>6s} {'save_ms':>8s}")
     print(hdr)
-    for mode, r in res.items():
-        served = f"{r['served']}/{r['expected']}"
-        print(f"{mode:10s} {r['images_s']:8.2f} {r['cells_s']:10.0f} "
-              f"{served:>8s} {r['padding_waste']:10.1%} "
-              f"{r['buckets']:8d} {r['jit_compiles']:5d}")
-        ok &= r["served"] == r["expected"]
-        ok &= r["recompile_bound_ok"]
-    speedup = res["balanced"]["images_s"] / res["naive"]["images_s"]
-    print(f"balanced vs naive: {speedup:.2f}x images/s; padding waste "
-          f"{res['naive']['padding_waste']:.1%} -> "
-          f"{res['balanced']['padding_waste']:.1%}")
+    for scen, modes in res.items():
+        for mode, r in modes.items():
+            served = f"{r['served']}/{r['expected']}"
+            budget = f"{r['jit_compiles']}<={r['compile_budget']}"
+            print(f"{scen:9s} {mode:9s} {r['images_s']:8.2f} "
+                  f"{r['cells_s']:10.0f} {served:>7s} "
+                  f"{r['padding_waste']:7.1%} {budget:>11s} "
+                  f"{r['merge_count']:6d} {r['fused_lane_count']:6d} "
+                  f"{r['modeled_saving_ms']:8.2f}")
+            ok &= r["served"] == r["expected"]
+            ok &= r["recompile_bound_ok"]
+
+    mixed, sparse = res["mixed"], res["sparse"]
+    bal_naive = mixed["balanced"]["images_s"] / mixed["naive"]["images_s"]
+    plan_mixed = mixed["planned"]["images_s"] / mixed["balanced"]["images_s"]
+    plan_sparse = (sparse["planned"]["images_s"]
+                   / sparse["balanced"]["images_s"])
+    measured_saving_ms = (sparse["balanced"]["seconds"]
+                          - sparse["planned"]["seconds"]) * 1e3
+    print(f"balanced vs naive (mixed): {bal_naive:.2f}x images/s; padding "
+          f"waste {mixed['naive']['padding_waste']:.1%} -> "
+          f"{mixed['balanced']['padding_waste']:.1%}")
+    print(f"planner={args.planner} vs balanced: {plan_mixed:.2f}x (mixed), "
+          f"{plan_sparse:.2f}x (sparse); sparse saving modeled="
+          f"{sparse['planned']['modeled_saving_ms']:.1f}ms measured="
+          f"{measured_saving_ms:.1f}ms")
 
     from repro.bench import write_bench_artifact
     write_bench_artifact(
         args.out, kind="vision",
         config={k: v for k, v in vars(args).items() if k != "out"},
         results=res,
-        extra={"balanced_vs_naive": speedup})
+        extra={"balanced_vs_naive": bal_naive,
+               "planned_vs_balanced_mixed": plan_mixed,
+               "planned_vs_balanced_sparse": plan_sparse,
+               "sparse_measured_saving_ms": measured_saving_ms,
+               "calibration": fit})
     print(f"wrote {args.out}")
     if not ok:
-        print("FAIL: unserved requests or recompile bound exceeded",
+        print("FAIL: unserved requests or recompile budget exceeded",
               file=sys.stderr)
         sys.exit(1)
-    if not args.smoke and speedup <= 1.0:
-        print(f"FAIL: balanced bucketing ({res['balanced']['images_s']:.2f} "
-              f"img/s) did not beat naive padding "
-              f"({res['naive']['images_s']:.2f} img/s)", file=sys.stderr)
-        sys.exit(1)
+    if not args.smoke:
+        if bal_naive <= 1.0:
+            print(f"FAIL: balanced bucketing ({bal_naive:.2f}x) did not "
+                  f"beat naive padding", file=sys.stderr)
+            sys.exit(1)
+        if args.planner != "off" and plan_mixed < 1.0:
+            print(f"FAIL: planner {args.planner} ({plan_mixed:.2f}x) lost "
+                  f"to balanced on the mixed workload", file=sys.stderr)
+            sys.exit(1)
+        if args.planner in ("fuse", "full") and plan_sparse <= 1.0:
+            print(f"FAIL: planner {args.planner} ({plan_sparse:.2f}x) must "
+                  f"be strictly faster than balanced on the sparse "
+                  f"singleton-heavy scenario", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,11 +7,14 @@ Pipeline:
   2. a continuous-batching ``VisionEngine``: image requests of mixed
      resolutions and per-request token keep rates admitted through the
      shared ``Scheduler`` (prune-pressure-aware policy), executed as
-     per-stage segments with the ``RaggedBatcher`` regrouping the ragged
-     population into dense token-count buckets at every TDM boundary;
+     per-stage segments; the ``TilePlanner`` (planner='full') prices the
+     ragged population with the accelerator cost model each step and
+     emits an ``ExecutionPlan`` — dense token-count tiles (bucket-merged
+     when the model says padding is cheaper than a dispatch) plus fused
+     express lanes for bucket-singleton requests;
   3. verification: every served logit vector is BIT-EXACT against the
      single-request offline path (``forward_vit_packed``), regardless of
-     what else was in flight.
+     what else was in flight and of what the planner merged or fused.
 
 Run: PYTHONPATH=src python examples/serve_vit_pruned.py
 """
@@ -53,15 +56,18 @@ def main():
         for i, (n, r_t) in enumerate(mixes)]
 
     engine = VisionEngine(cfg, masked, packed,
-                          VisionEngineConfig(max_batch=3),
+                          VisionEngineConfig(max_batch=3, planner="full"),
                           policy="prune_pressure_aware")
     out = engine.serve(reqs)
     st = engine.stats()
     print(f"served {st['images_served']} images in {st['steps']} engine "
-          f"steps over {st['batcher_tiles']} tiles "
-          f"(padding waste {st['batcher_padding_waste']:.1%}, "
-          f"jit compiles {st['jit_compile_count']} <= "
-          f"buckets {st['bucket_count']})")
+          f"steps over {st['batcher_tiles']} tiles + "
+          f"{st['plan_lanes']} express lanes "
+          f"(merges {st['plan_merges']}, padding waste "
+          f"{st['batcher_padding_waste']:.1%}, jit compiles "
+          f"{st['jit_compile_count']} <= buckets+trajectories "
+          f"{st['compile_budget']}, modeled saving "
+          f"{st['plan_modeled_saving_ms']:.2f}ms)")
     admit_order = [uid for kind, uid in engine.events if kind == "admit"]
     print(f"admission order (prune-pressure-aware): {admit_order}")
 

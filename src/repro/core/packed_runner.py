@@ -214,6 +214,33 @@ def vit_head(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
     return logits.astype(jnp.float32)
 
 
+def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
+                    x: jax.Array, steps: Tuple[Tuple[Segment,
+                                                     Optional[int]], ...]
+                    ) -> jax.Array:
+    """Compose consecutive segments into ONE program: ``steps`` is a static
+    tuple of ``(segment, k)`` pairs (``k`` only for TDM segments). This is
+    the express-lane body the planner compiles per trajectory for requests
+    that are singletons in every bucket — unbatched and unpadded, so no
+    ``n_valid`` is ever needed. All shapes are static given the entry shape
+    and the ``k`` sequence."""
+    for seg, k in steps:
+        kind = seg[0]
+        if kind == "embed":
+            x = vit_embed(cfg, params, x)
+        elif kind == "layers":
+            x = vit_layers(cfg, params, packed, x, seg[1], seg[2])
+        elif kind == "tdm":
+            if k is None:
+                raise ValueError("fused tdm steps need an explicit static k")
+            x = vit_tdm_layer(cfg, params, packed, x, seg[1], k=k)
+        elif kind == "head":
+            x = vit_head(cfg, params, x)
+        else:
+            raise ValueError(f"unknown segment {seg!r} in fused steps")
+    return x
+
+
 # ===========================================================================
 # Offline single-batch forward — the segments composed sequentially
 # ===========================================================================
@@ -321,7 +348,12 @@ class PackedVitSegments:
                 cfg, params, packed, x, layer, k=k, n_valid=n_valid),
             static_argnames=("layer", "k"))
         self._head = jax.jit(lambda params, x: vit_head(cfg, params, x))
+        self._fused = jax.jit(
+            lambda params, packed, x, steps: run_fused_steps(
+                cfg, params, packed, x, steps),
+            static_argnames=("steps",))
         self._compiled: set = set()
+        self._fused_trajectories: set = set()
 
     def run(self, seg: Segment, x: jax.Array,
             n_valid: Optional[np.ndarray] = None,
@@ -348,6 +380,23 @@ class PackedVitSegments:
             return self._head(self.params, x)
         raise ValueError(f"unknown segment {seg!r}")
 
+    def run_fused(self, steps: Tuple[Tuple[Segment, Optional[int]], ...],
+                  x: jax.Array) -> jax.Array:
+        """Express lane: execute ``steps`` — consecutive ``(segment, k)``
+        pairs — as ONE jitted trajectory program (one dispatch for the whole
+        remaining forward of a bucket-singleton request). Compiles once per
+        distinct (steps, entry shape); the per-trajectory ledger is
+        ``fused_trajectory_count`` and its keys bound the extra jit entries
+        beyond the tile bucket set."""
+        steps = tuple((tuple(seg), None if k is None else int(k))
+                      for seg, k in steps)
+        if not steps:
+            raise ValueError("fused run needs at least one step")
+        self._fused_trajectories.add((steps, tuple(x.shape)))
+        self._compiled.add((("fused",) + steps, tuple(x.shape), False, None))
+        return self._fused(self.params, self.packed, jnp.asarray(x),
+                           steps=steps)
+
     # -- compile observability ---------------------------------------------
     @property
     def compile_count(self) -> int:
@@ -357,11 +406,18 @@ class PackedVitSegments:
     def compiled_tiles(self) -> List[Tuple]:
         return sorted(self._compiled, key=repr)
 
+    @property
+    def fused_trajectory_count(self) -> int:
+        """Distinct fused trajectory programs dispatched (the express-lane
+        half of the bucket ∪ trajectory recompile bound)."""
+        return len(self._fused_trajectories)
+
     def jit_compile_count(self) -> int:
         """Total entries across the jit caches (what XLA actually
-        compiled)."""
+        compiled), fused trajectory programs included."""
         total = 0
-        for fn in (self._embed, self._layers, self._tdm, self._head):
+        for fn in (self._embed, self._layers, self._tdm, self._head,
+                   self._fused):
             try:
                 total += fn._cache_size()
             except AttributeError:  # older jax: fall back to the ledger

@@ -121,6 +121,35 @@ def encoder_cycles(N: int, cfg: ModelConfig, p: PruningConfig,
             "em": em, "mlp": mlp1 + mlp2, "total": total}
 
 
+def vit_segment_cycles(cfg: ModelConfig, seg, n_tokens: int,
+                       acc: AcceleratorConfig = PAPER_U250,
+                       mode: str = "pipelined") -> float:
+    """Cycles for ONE image row of a ``core.packed_runner`` segment at a
+    (padded) token count of ``n_tokens`` — the per-stage pricing the
+    serving ``TileCostModel`` uses to trade padding against dispatches
+    (merge decisions) and to estimate remaining work (deadline slack).
+    Segment forms: ``("embed",) | ("layers", lo, hi) | ("tdm", i) |
+    ("head",)``."""
+    p = cfg.pruning
+    kind = seg[0]
+    if kind == "embed":
+        pdim = cfg.patch_size ** 2 * 3
+        return float(sbmm_cycles(n_tokens, pdim, cfg.d_model, 1,
+                                 p.block_size, acc, mode=mode))
+    if kind == "layers":
+        return float((seg[2] - seg[1]) * encoder_cycles(
+            n_tokens, cfg, p, acc, has_tdm=False, mode=mode)["total"])
+    if kind == "tdm":
+        return float(encoder_cycles(n_tokens, cfg, p, acc, has_tdm=True,
+                                    mode=mode)["total"])
+    if kind == "head":
+        return float(sbmm_cycles(1, cfg.d_model, cfg.num_classes, 1,
+                                 p.block_size, acc, mode=mode)
+                     + dhbmm_cycles(n_tokens, cfg.d_model, 1, 1,
+                                    p.block_size, acc, mode=mode))
+    raise ValueError(f"unknown segment kind {kind!r}")
+
+
 def model_latency_ms(cfg: ModelConfig, p: PruningConfig,
                      acc: AcceleratorConfig = PAPER_U250,
                      mode: str = "pipelined") -> Dict[str, float]:

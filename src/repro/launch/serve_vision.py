@@ -1,16 +1,20 @@
 """Vision serving launcher: image requests through the VisionEngine
-(Scheduler + RaggedBatcher + PackedVitSegments).
+(Scheduler + TilePlanner/RaggedBatcher + PackedVitSegments).
 
     PYTHONPATH=src python -m repro.launch.serve_vision --requests 16 \\
-        --slots 4 --mode balanced --policy prune_pressure_aware
+        --slots 4 --planner full --policy prune_pressure_aware
 
 Builds the reduced DeiT config, runs the paper's simultaneous pruning
 offline (init scores -> hard masks -> SBMM packing), then serves a mixed
 stream of image resolutions and per-request token keep rates through the
-continuous-batching engine. ``--mode naive`` A/Bs the classic padded batch
-against the load-balanced bucketing; ``--policy`` selects the admission
-policy shared with the LM path (fifo / shortest_prompt_first /
-prune_pressure_aware).
+continuous-batching engine. ``--planner`` selects the execution-planning
+mode (``off`` = PR 4's identity bucketing, ``merge`` = cost-model bucket
+merging, ``fuse`` = express-lane trajectory fusion, ``full`` = both);
+``--deadline-ms`` attaches a latency SLO to every request —
+deadline-aware tiling is active in every non-``off`` planner mode.
+``--mode naive`` A/Bs the classic padded batch against the
+load-balanced bucketing; ``--policy`` selects the admission policy shared
+with the LM path (fifo / shortest_prompt_first / prune_pressure_aware).
 """
 from __future__ import annotations
 
@@ -22,18 +26,21 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import packed_runner as PR
 from repro.models import model as M
 from repro.models import pruning_glue as PG
-from repro.serving import VisionEngine, VisionEngineConfig, VisionRequest
+from repro.serving import (PLANNER_MODES, VisionEngine, VisionEngineConfig,
+                           VisionRequest)
 
 
 def make_requests(cfg, num: int, arrival_spread: int, seed: int,
-                  r_ts=None, size_weights=None):
+                  r_ts=None, size_weights=None, deadline_ms=None,
+                  unique_sizes: bool = False):
     """Synthetic mixed request stream: three image resolutions (full,
     near-full, half side), per-request token keep rates, staggered
     arrivals. Shared by this launcher and benchmarks/vision_bench.py (the
-    bench passes a size-skewed ``size_weights``)."""
+    bench passes a size-skewed ``size_weights``; its singleton-heavy
+    scenario passes ``unique_sizes`` to draw every patch count distinct so
+    no two requests ever share a bucket)."""
     rng = np.random.default_rng(seed)
     side = cfg.image_size // cfg.patch_size
     sizes = sorted({max(1, side // 2) ** 2, max(1, side - 1) ** 2,
@@ -45,31 +52,55 @@ def make_requests(cfg, num: int, arrival_spread: int, seed: int,
     else:
         p = np.asarray(size_weights[:len(sizes)], np.float64)
         p = p / p.sum()
+    if unique_sizes:
+        lo, hi = max(1, side ** 2 // 4), side ** 2
+        pool = rng.permutation(np.arange(lo, hi + 1))
+        counts = [int(pool[i % len(pool)]) for i in range(num)]
+    else:
+        counts = [int(rng.choice(sizes, p=p)) for _ in range(num)]
     pdim = cfg.patch_size ** 2 * 3
     return [VisionRequest(
         uid=i,
-        patches=rng.standard_normal(
-            (int(rng.choice(sizes, p=p)), pdim)).astype(np.float32),
+        patches=rng.standard_normal((counts[i], pdim)).astype(np.float32),
         r_t=r_ts[int(rng.integers(len(r_ts)))],
-        arrival_step=int(rng.integers(0, arrival_spread + 1)))
+        arrival_step=int(rng.integers(0, arrival_spread + 1)),
+        deadline_ms=deadline_ms)
         for i in range(num)]
+
+
+def plan_stats_line(stats) -> str:
+    """The end-of-run planner summary shared by the launcher and the
+    bench: merges, fused lanes, deadline dispatches, and the modeled
+    saving of the plan vs the identity plan."""
+    return (f"planner={stats['plan_mode']} merges={stats['plan_merges']} "
+            f"fused_lanes={stats['plan_lanes']} "
+            f"(segments={stats['plan_fused_segments']}) "
+            f"deadline_dispatches={stats['plan_deadline_urgent']} "
+            f"splits={stats['plan_deadline_splits']} "
+            f"modeled_saving={stats['plan_modeled_saving_ms']:.3f}ms "
+            f"({'calibrated' if stats['plan_calibrated'] else 'uncalibrated'}"
+            f" cost model)")
 
 
 def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
           mode: str = "balanced", token_tile: int = 1,
           policy: str = "fifo", image_size: int = 0,
-          arrival_spread: int = 4, seed: int = 0):
+          arrival_spread: int = 4, seed: int = 0,
+          planner: str = "full", deadline_ms: float = 0.0):
     cfg = get_config(arch).reduced()
     if image_size:
         cfg = cfg.replace(image_size=image_size)
     key = jax.random.PRNGKey(seed)
     params = M.init_params(cfg, key)
     scores = PG.init_scores(cfg, params, jax.random.fold_in(key, 7))
+    if mode == "naive":
+        planner = "off"  # naive padding has no buckets to plan over
     vc = VisionEngineConfig(max_batch=slots, mode=mode,
-                            token_tile=token_tile)
+                            token_tile=token_tile, planner=planner)
     engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
                                       policy=policy)
-    reqs = make_requests(cfg, num_requests, arrival_spread, seed)
+    reqs = make_requests(cfg, num_requests, arrival_spread, seed,
+                         deadline_ms=deadline_ms or None)
     t0 = time.time()
     out = engine.serve(reqs)
     dt = time.time() - t0
@@ -86,6 +117,14 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--mode", choices=("balanced", "naive"),
                     default="balanced")
+    ap.add_argument("--planner", choices=PLANNER_MODES, default="full",
+                    help="execution planning: off = identity bucketing, "
+                         "merge = cost-model bucket merging, fuse = "
+                         "express-lane trajectory fusion, full = both")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="attach a latency SLO (ms from admission) to "
+                         "every request; 0 = no deadlines (deadline-aware "
+                         "tiling is active in every non-off planner mode)")
     ap.add_argument("--token-tile", type=int, default=1,
                     help="token bucket quantization (1 = exact, bit-exact)")
     ap.add_argument("--policy", default="fifo",
@@ -100,14 +139,15 @@ def main():
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.slots, args.mode,
                 args.token_tile, args.policy, args.image_size,
-                args.arrival_spread, args.seed)
+                args.arrival_spread, args.seed, args.planner,
+                args.deadline_ms)
     if args.json:
         print(json.dumps({
             "top1": {str(u): int(np.argmax(lg))
                      for u, lg in out["outputs"].items()},
             "images_per_s": out["images_per_s"],
             "stats": out["stats"],
-        }))
+        }, default=str))
     else:
         st = out["stats"]
         print(f"served {st['images_served']} images in "
@@ -116,7 +156,8 @@ def main():
         print(f"steps={st['steps']} tiles={st['batcher_tiles']} "
               f"padding_waste={st['batcher_padding_waste']:.1%} "
               f"jit_compiles={st['jit_compile_count']} <= "
-              f"buckets={st['bucket_count']}")
+              f"buckets+trajectories={st['compile_budget']}")
+        print(plan_stats_line(st))
         for uid, logits in sorted(out["outputs"].items()):
             print(f"  uid {uid}: top-1 class {int(np.argmax(logits))}")
 

@@ -4,15 +4,19 @@ LM path: ``Scheduler`` (admission policy) / ``KVCacheManager`` (per-slot
 cache state) / ``ModelRunner`` (jitted steps + compile cache) compose into
 ``ServeEngine``; ``prune_kv_caches`` is the standalone KV compaction.
 
-Vision path: the same ``Scheduler`` + ``RaggedBatcher`` (token-count
-bucketing) + ``core.packed_runner.PackedVitSegments`` compose into
-``VisionEngine`` — continuous-batching inference for the packed,
-simultaneously-pruned ViT.
+Vision path: the same ``Scheduler`` + ``TilePlanner`` (cost-model-driven
+execution planning over the ``RaggedBatcher``'s token-count buckets:
+bucket merging, express-lane fusion, deadline-aware tiling) +
+``core.packed_runner.PackedVitSegments`` compose into ``VisionEngine`` —
+continuous-batching inference for the packed, simultaneously-pruned ViT.
 """
 from repro.serving.cache_manager import (KVCacheManager, bucket_length,
                                          prune_kv_caches)
 from repro.serving.engine import (ElasticContext, EngineConfig, Request,
                                   ServeEngine)
+from repro.serving.planner import (PLANNER_MODES, ExecutionPlan, FusedLane,
+                                   PlanItem, PlanStats, TileCostModel,
+                                   TilePlanner)
 from repro.serving.ragged_batcher import RaggedBatcher, Tile
 from repro.serving.runner import ModelRunner, build_padded_batch
 from repro.serving.scheduler import Scheduler
@@ -23,4 +27,6 @@ __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
            "Scheduler", "KVCacheManager", "ModelRunner", "prune_kv_caches",
            "bucket_length", "build_padded_batch",
            "VisionEngine", "VisionEngineConfig", "VisionRequest",
-           "RaggedBatcher", "Tile"]
+           "RaggedBatcher", "Tile",
+           "TilePlanner", "TileCostModel", "ExecutionPlan", "PlanItem",
+           "FusedLane", "PlanStats", "PLANNER_MODES"]

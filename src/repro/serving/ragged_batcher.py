@@ -33,6 +33,12 @@ Guarantees (property-tested in tests/test_ragged_batcher.py):
 Recompiles are bounded by the bucket set: every tile maps to a
 ``bucket_key`` = (stage key, token tile, batch tile), and the engine's
 jitted segments compile at most once per distinct key.
+
+The batcher is the *grouping* layer; cost-driven rewrites of the grouping
+(bucket merging, express-lane fusion, deadline splits) live above it in
+``serving.planner.TilePlanner``, which calls :meth:`partition` /
+:meth:`record` so this class keeps owning the padding/bucket accounting
+for whatever was actually dispatched.
 """
 from __future__ import annotations
 
@@ -116,7 +122,19 @@ class RaggedBatcher:
         n_cap)`` where ``n_cap`` bounds the padded token tile (e.g. the
         position-table capacity at the embed stage) — per live request.
         Returns tiles covering every item exactly once, deterministically
-        ordered."""
+        ordered, and records them into the cumulative stats. This is the
+        *identity plan* — ``serving.planner.TilePlanner`` in mode ``off``
+        reproduces it exactly; richer modes call :meth:`partition`,
+        transform the tiles (merge/fuse/split), then :meth:`record` what
+        was actually dispatched."""
+        tiles = self.partition(items)
+        self.record(tiles)
+        return tiles
+
+    def partition(self, items: Sequence[Tuple]) -> List[Tile]:
+        """Pure grouping: the tiles of :meth:`plan` without touching the
+        cumulative accounting (callers that rewrite the tiling — the
+        ``TilePlanner`` — record the final tiles themselves)."""
         groups: Dict[Tuple, List[int]] = {}
         for idx, item in enumerate(items):
             stage, n = item[0], item[1]
@@ -153,13 +171,15 @@ class RaggedBatcher:
                     tiles.append(Tile(
                         stage=key[0], members=tuple(chunk), n_tokens=counts,
                         n_tile=key[1], b_tile=self.tile_batch(len(chunk))))
+        return tiles
 
+    def record(self, tiles: Sequence[Tile]) -> None:
+        """Fold dispatched tiles into the cumulative padding/bucket stats."""
         for t in tiles:
             self.real_cells += t.real_cells
             self.padded_cells += t.padded_cells
             self.tiles_planned += 1
             self.bucket_keys.add(t.bucket_key)
-        return tiles
 
     # -- observability -----------------------------------------------------
     @property

@@ -25,7 +25,11 @@ duck-typed (``prompt`` tokens or ``patches`` rows):
   the TDM token-count trajectory for vision, the KV-prune-discounted
   footprint for LMs). HeatViT/SPViT motivate scheduling on the pruned
   load, not the raw size — a heavily-pruned large image is cheaper than a
-  lightly-pruned medium one.
+  lightly-pruned medium one. Vision requests carrying a ``deadline_ms``
+  get the same annotation additionally discounted by deadline tightness
+  relative to their cost-model solo latency (``serving.planner``), so the
+  SAME policy admits urgent requests earlier — deadline awareness needs
+  no separate policy.
 """
 from __future__ import annotations
 

@@ -11,10 +11,15 @@ pruning. This engine is the software twin of that serving layer:
 * Execution walks the per-stage segmentation of ``forward_vit_packed``
   (``core.packed_runner.vit_segments``): prune boundaries are batching
   boundaries. Each engine step advances every in-flight image one segment.
-* Between segments the ``RaggedBatcher`` regroups the live population —
-  whose token counts diverge at every TDM layer — into dense token-count
-  buckets so the SBMM/attention kernels always see rectangular tiles, with
-  jit recompiles bounded by the bucket set.
+* Between segments the ``TilePlanner`` (``serving.planner``) prices the
+  ragged population with the accelerator cost model and emits an
+  ``ExecutionPlan``: dense token-count tiles (grouped by the
+  ``RaggedBatcher``, optionally bin-packed/merged when the modeled padding
+  cost is below the dispatch saving), express-lane fused trajectories for
+  bucket-singleton requests, and deadline-driven tile splits/ordering for
+  requests carrying a ``deadline_ms``. Jit recompiles are bounded by the
+  bucket ∪ trajectory set. ``VisionEngineConfig.planner="off"`` (default)
+  is the identity plan — exactly PR 4's ``RaggedBatcher.plan`` behavior.
 
 Bit-exactness: in the default ``balanced`` mode with ``token_tile=1``,
 buckets hold requests at *identical* token counts, the batch dimension is
@@ -34,6 +39,7 @@ continuous-batching scenario.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -41,6 +47,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packed_runner as PR
+from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
+                                   TilePlanner)
 from repro.serving.ragged_batcher import RaggedBatcher
 from repro.serving.scheduler import Scheduler
 
@@ -53,11 +61,15 @@ class VisionRequest:
     patches: np.ndarray              # [n_patches, patch²·3] float32
     r_t: Optional[float] = None      # per-request TDM keep rate (None = cfg)
     arrival_step: int = 0            # engine step at which it may be admitted
+    deadline_ms: Optional[float] = None  # wall-clock SLO from admission; the
+    # planner carves the request into smaller, first-dispatched tiles when
+    # its modeled slack runs out, and the admission annotation below shrinks
+    # so prune_pressure_aware admits tight-deadline requests earlier
     logits: Optional[np.ndarray] = None
     done: bool = False
     prune_load: Optional[float] = None   # predicted post-prune token load
-    # (sum of the per-segment token counts; set at submit — the
-    # prune_pressure_aware admission policy reads it)
+    # (sum of the per-segment token counts, deadline-discounted; set at
+    # submit — the prune_pressure_aware admission policy reads it)
 
     @property
     def n_patches(self) -> int:
@@ -69,6 +81,7 @@ class VisionEngineConfig:
     max_batch: int = 8        # in-flight image slots
     token_tile: int = 1       # bucket quantization (1 = exact, bit-exact)
     mode: str = "balanced"    # 'balanced' buckets | 'naive' pad-to-max
+    planner: str = "off"      # TilePlanner mode: off|merge|fuse|full
     use_tdm: Optional[bool] = None   # None = cfg.pruning.token_pruning_enabled
 
     def __post_init__(self):
@@ -81,6 +94,12 @@ class VisionEngineConfig:
         if self.mode not in ("balanced", "naive"):
             raise ValueError(f"VisionEngineConfig.mode must be 'balanced' "
                              f"or 'naive', got {self.mode!r}")
+        if self.planner not in PLANNER_MODES:
+            raise ValueError(f"VisionEngineConfig.planner must be one of "
+                             f"{PLANNER_MODES}, got {self.planner!r}")
+        if self.planner != "off" and self.mode != "balanced":
+            raise ValueError(f"planner {self.planner!r} requires "
+                             f"mode='balanced' (got {self.mode!r})")
 
 
 @dataclasses.dataclass
@@ -93,16 +112,19 @@ class _Live:
     x: Any               # patches (pre-embed) or [n_tokens, D] activations
     n_tokens: int        # real rows of x (grouping key)
     r_t: float
+    admit_t: float = 0.0  # monotonic admission time (deadline slack base)
 
 
 class VisionEngine:
     """Single-host reference engine for packed-ViT serving. Exposes the
-    layers as ``.scheduler`` / ``.batcher`` / ``.segments`` for tests,
-    policies, and telemetry (mirroring ``ServeEngine``'s three layers)."""
+    layers as ``.scheduler`` / ``.planner`` (owning ``.batcher``) /
+    ``.segments`` for tests, policies, and telemetry (mirroring
+    ``ServeEngine``'s three layers)."""
 
     def __init__(self, cfg: ModelConfig, params: Dict, packed: Dict,
                  vc: Optional[VisionEngineConfig] = None,
-                 policy: "str | Callable" = "fifo"):
+                 policy: "str | Callable" = "fifo",
+                 cost_model: Optional[TileCostModel] = None):
         if cfg.family != "vit":
             raise ValueError(f"VisionEngine serves the 'vit' family, "
                              f"got {cfg.family!r}")
@@ -114,6 +136,10 @@ class VisionEngine:
         self.batcher = RaggedBatcher(token_tile=self.vc.token_tile,
                                      mode=self.vc.mode,
                                      max_batch=self.vc.max_batch)
+        self.planner = TilePlanner(
+            self.batcher,
+            cost_model if cost_model is not None else TileCostModel(cfg),
+            mode=self.vc.planner)
         self._live: Dict[int, _Live] = {}   # slot -> state
         # not-yet-arrived requests as (absolute arrival step, request):
         # arrival_step is relative to the serve() call that submitted it,
@@ -157,6 +183,18 @@ class VisionEngine:
                     self.cfg, r.n_patches,
                     r_t=r.r_t, use_tdm=self._use_tdm)
                 r.prune_load = float(sum(traj))
+                if r.deadline_ms is not None:
+                    # deadline-aware admission annotation: discount the
+                    # post-prune load by how tight the deadline is relative
+                    # to the request's modeled solo latency, so the SAME
+                    # prune_pressure_aware policy admits urgent requests
+                    # earlier (no new policy needed)
+                    cm = self.planner.cost_model
+                    r_t = self.cfg.pruning.r_t if r.r_t is None else r.r_t
+                    solo_ms = cm.ms(cm.trajectory_cycles(
+                        self._traj_from(0, r.n_patches, r_t)))
+                    r.prune_load *= min(1.0, r.deadline_ms
+                                        / max(solo_ms, 1e-9))
             self._pending.append((base + r.arrival_step, r))
         self._pending.sort(key=lambda ar: ar[0])
         out: Dict[int, np.ndarray] = {}
@@ -172,14 +210,20 @@ class VisionEngine:
         return out
 
     def stats(self) -> Dict[str, Any]:
+        buckets = self.batcher.bucket_count
+        trajectories = self.planner.trajectory_count
         return {
             "images_served": self.images_served,
             "steps": self.steps,
             "admissions": self.scheduler.num_admissions,
             "compile_count": self.segments.compile_count,
             "jit_compile_count": self.segments.jit_compile_count(),
-            "bucket_count": self.batcher.bucket_count,
+            "bucket_count": buckets,
+            "trajectory_count": trajectories,
+            # the recompile bound: jit_compile_count <= compile_budget
+            "compile_budget": buckets + trajectories,
             **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
+            **{f"plan_{k}": v for k, v in self.planner.stats().items()},
         }
 
     # -- engine internals --------------------------------------------------
@@ -199,6 +243,9 @@ class VisionEngine:
         if not 0.0 < r_t <= 1.0:
             raise ValueError(f"request {r.uid}: r_t must be in (0, 1], "
                              f"got {r_t}")
+        if r.deadline_ms is not None and r.deadline_ms <= 0.0:
+            raise ValueError(f"request {r.uid}: deadline_ms must be "
+                             f"positive, got {r.deadline_ms}")
 
     def _admit_arrivals(self) -> None:
         arrived = [r for at, r in self._pending if at <= self.steps]
@@ -216,16 +263,46 @@ class VisionEngine:
                 req=req, seg_idx=0,
                 x=np.asarray(req.patches, np.float32),
                 n_tokens=req.n_patches,
-                r_t=self.cfg.pruning.r_t if req.r_t is None else req.r_t)
+                r_t=self.cfg.pruning.r_t if req.r_t is None else req.r_t,
+                admit_t=time.monotonic())
+
+    def _traj_from(self, seg_idx: int, n_tokens: int, r_t: float):
+        """Remaining (stage key, entry token count) trajectory from segment
+        ``seg_idx`` at ``n_tokens`` real tokens. A stage key is the batcher
+        grouping identity — the segment (weights + static layer range)
+        plus, at TDM segments, the static keep count (tiles must be
+        k-uniform because k is a compile-time top-k width). Offsets align
+        with engine steps, which is what the planner's fusion and deadline
+        logic rely on."""
+        entries = []
+        n = n_tokens
+        for si in range(seg_idx, len(self.segments.plan)):
+            seg = self.segments.plan[si]
+            if seg[0] == "tdm":
+                k = PR.tdm_keep_count(n, r_t)
+                entries.append(((si, seg, k), n))
+                n = k + 2
+            else:
+                entries.append(((si, seg, None), n))
+                if seg[0] == "embed":
+                    n += 1  # + CLS
+        return tuple(entries)
 
     def _stage_key(self, st: _Live):
-        """Batcher grouping identity: the segment (weights + static layer
-        range) plus, at TDM segments, the static keep count — tiles must be
-        k-uniform because k is a compile-time top-k width."""
+        """Current batcher grouping identity (= trajectory offset 0)."""
         seg = self.segments.plan[st.seg_idx]
         if seg[0] == "tdm":
             return (st.seg_idx, seg, PR.tdm_keep_count(st.n_tokens, st.r_t))
         return (st.seg_idx, seg, None)
+
+    def _plan_item(self, st: _Live, now: float) -> PlanItem:
+        traj = self._traj_from(st.seg_idx, st.n_tokens, st.r_t)
+        left = None
+        if st.req.deadline_ms is not None:
+            left = st.req.deadline_ms - (now - st.admit_t) * 1e3
+        return PlanItem(stage=traj[0][0], n_tokens=st.n_tokens,
+                        cap=self._token_cap(st), trajectory=traj,
+                        deadline_left_ms=left)
 
     def _token_cap(self, st: _Live) -> Optional[int]:
         """Hard bound on the padded token tile: the embed stage indexes the
@@ -236,18 +313,38 @@ class VisionEngine:
         return None
 
     def step(self, out: Dict[int, np.ndarray]) -> None:
-        """Advance every in-flight image one segment: plan tiles over the
-        ragged population, run each tile, scatter results, retire finished
-        images (freeing their slots for the next admissions)."""
+        """Advance the in-flight population: ask the planner for an
+        ``ExecutionPlan`` over the ragged population, run its fused express
+        lanes (whole remaining trajectories, one dispatch each) and tiles
+        (one segment each, planner-ordered so deadline-urgent tiles go
+        first), scatter results, retire finished images (freeing their
+        slots for the next admissions)."""
         slots = sorted(self._live)
-        items = [(self._stage_key(self._live[s]), self._live[s].n_tokens,
-                  self._token_cap(self._live[s]))
-                 for s in slots]
-        tiles = self.batcher.plan(items)
-        for tile in tiles:
+        now = time.monotonic()
+        items = [self._plan_item(self._live[s], now) for s in slots]
+        plan = self.planner.plan(items)
+        # urgent tiles (the plan's leading tiles) dispatch BEFORE lanes: a
+        # fused lane is the most expensive single dispatch of the step and
+        # must not sit on a deadline-urgent request's critical path
+        n_urgent = plan.urgent_tile_count()
+        for tile in plan.tiles[:n_urgent]:
+            self._run_tile(tile, [slots[i] for i in tile.members])
+        for lane in plan.lanes:
+            self._run_lane(lane, slots[lane.member])
+        for tile in plan.tiles[n_urgent:]:
             self._run_tile(tile, [slots[i] for i in tile.members])
         self.steps += 1
         self._retire(out)
+
+    def _run_lane(self, lane, slot: int) -> None:
+        """Run one express lane: the request's whole remaining trajectory
+        as a single fused program (engine trajectories always end at the
+        head, so the result is the logits)."""
+        st = self._live[slot]
+        steps = tuple((stage[1], stage[2]) for stage, _ in lane.trajectory)
+        y = self.segments.run_fused(steps, st.x[None])
+        st.req.logits = np.asarray(y)[0]
+        st.seg_idx = len(self.segments.plan)
 
     def _run_tile(self, tile, member_slots: List[int]) -> None:
         states = [self._live[s] for s in member_slots]

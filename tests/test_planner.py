@@ -1,0 +1,267 @@
+"""TilePlanner / TileCostModel unit tests: identity-plan equivalence in
+mode ``off``, cost-model-gated bucket merging, express-lane fusion of
+forever-singletons, deadline splits/ordering, calibration fitting, and
+ExecutionPlan hashability/determinism."""
+import pytest
+
+from repro.serving.planner import (PLANNER_MODES, ExecutionPlan, PlanItem,
+                                   TileCostModel, TilePlanner)
+from repro.serving.ragged_batcher import RaggedBatcher
+
+
+def _items(*specs):
+    """specs: (stage, n) or (stage, n, traj) or dict kwargs."""
+    out = []
+    for s in specs:
+        if isinstance(s, dict):
+            out.append(PlanItem(**s))
+        elif len(s) == 2:
+            out.append(PlanItem(stage=s[0], n_tokens=s[1]))
+        else:
+            out.append(PlanItem(stage=s[0], n_tokens=s[1], trajectory=s[2]))
+    return out
+
+
+def _planner(mode="full", overhead=1000.0, **kw):
+    b = RaggedBatcher(token_tile=1, max_batch=8)
+    cm = TileCostModel(dispatch_overhead_cycles=overhead)
+    return TilePlanner(b, cm, mode=mode, **kw)
+
+
+# -- identity mode ---------------------------------------------------------
+def test_off_mode_is_the_ragged_batcher_identity_plan():
+    """Mode 'off' must reproduce RaggedBatcher.plan tile-for-tile — the
+    trivial cost model's special case (PR 4's bit-exact balanced path)."""
+    specs = [("a", 17), ("a", 17), ("a", 10), ("b", 17), ("a", 5)]
+    ref = RaggedBatcher(token_tile=1, max_batch=8).plan(specs)
+    p = _planner(mode="off")
+    plan = p.plan(_items(*specs))
+    assert list(plan.tiles) == ref
+    assert plan.lanes == ()
+    assert plan.covered_members() == list(range(len(specs)))
+    assert plan.stats.merges == plan.stats.lanes == 0
+    assert plan.stats.modeled_saving_cycles == 0.0
+    # off-mode identity also records into the batcher stats, like plan()
+    assert p.batcher.tiles_planned == len(ref)
+
+
+def test_off_mode_ignores_deadlines():
+    p = _planner(mode="off")
+    plan = p.plan(_items({"stage": "a", "n_tokens": 4,
+                          "deadline_left_ms": -5.0}))
+    assert plan.stats.deadline_urgent == 0
+
+
+# -- merging ---------------------------------------------------------------
+def test_merge_when_dispatch_overhead_dominates():
+    """Two under-full neighboring buckets of one stage merge into one
+    masked tile when overhead > modeled padding cost."""
+    p = _planner(mode="merge", overhead=1e6)
+    plan = p.plan(_items(("s", 8), ("s", 9)))
+    assert len(plan.tiles) == 1 and plan.stats.merges == 1
+    (t,) = plan.tiles
+    assert sorted(t.members) == [0, 1]
+    assert t.n_tile == 9 and t.needs_mask
+    assert plan.stats.modeled_saving_cycles > 0
+    assert plan.covered_members() == [0, 1]
+
+
+def test_no_merge_when_padding_costs_more_than_dispatch():
+    p = _planner(mode="merge", overhead=0.0)
+    plan = p.plan(_items(("s", 8), ("s", 9)))
+    assert len(plan.tiles) == 2 and plan.stats.merges == 0
+
+
+def test_merge_never_crosses_stages():
+    p = _planner(mode="merge", overhead=1e9)
+    plan = p.plan(_items(("s", 8), ("t", 9)))
+    assert len(plan.tiles) == 2 and plan.stats.merges == 0
+
+
+def test_merge_respects_token_cap():
+    """A hard cap (the embed stage's position table) blocks a merge that
+    would pad a member past it."""
+    p = _planner(mode="merge", overhead=1e9)
+    plan = p.plan(_items({"stage": "s", "n_tokens": 8, "cap": 8},
+                         {"stage": "s", "n_tokens": 9, "cap": 9}))
+    assert len(plan.tiles) == 2 and plan.stats.merges == 0
+    # without the cap the same population merges
+    p2 = _planner(mode="merge", overhead=1e9)
+    assert p2.plan(_items(("s", 8), ("s", 9))).stats.merges == 1
+
+
+def test_merge_chains_neighboring_buckets():
+    p = _planner(mode="merge", overhead=1e9)
+    plan = p.plan(_items(("s", 4), ("s", 5), ("s", 6)))
+    assert len(plan.tiles) == 1 and plan.stats.merges == 2
+    (t,) = plan.tiles
+    assert t.n_tile == 6 and len(t.members) == 3
+
+
+# -- express lanes ---------------------------------------------------------
+def _traj(stage_seq):
+    return tuple(stage_seq)
+
+
+def test_fusion_requires_singleton_in_every_bucket():
+    """An item fuses only when no other live item can ever share a bucket
+    with it — including collisions at FUTURE trajectory offsets (two
+    different-size requests converging to the same post-TDM count)."""
+    # item 0 and 1 differ now but collide at offset 1 -> neither fuses
+    t0 = _traj(((("L0",), 8), (("L1",), 6), (("H",), 6)))
+    t1 = _traj(((("L0",), 9), (("L1",), 6), (("H",), 6)))
+    p = _planner(mode="fuse")
+    plan = p.plan(_items((("L0",), 8, t0), (("L0",), 9, t1)))
+    assert plan.lanes == ()
+    # truly disjoint trajectories -> both fuse, no tiles remain
+    t1b = _traj(((("L0",), 9), (("L1",), 7), (("H",), 7)))
+    p2 = _planner(mode="fuse")
+    plan2 = p2.plan(_items((("L0",), 8, t0), (("L0",), 9, t1b)))
+    assert len(plan2.lanes) == 2 and plan2.tiles == ()
+    assert plan2.covered_members() == [0, 1]
+    assert plan2.stats.fused_segments == 6
+    assert p2.trajectory_count == 2
+
+
+def test_fusion_skips_items_sharing_current_bucket():
+    t = _traj(((("L0",), 8), (("H",), 8)))
+    p = _planner(mode="fuse")
+    plan = p.plan(_items((("L0",), 8, t), (("L0",), 8, t)))
+    assert plan.lanes == ()
+    assert len(plan.tiles) == 1  # they batch instead
+
+
+def test_fusion_needs_min_segments():
+    p = _planner(mode="fuse", fuse_min_segments=2)
+    plan = p.plan(_items((("H",), 8, _traj(((("H",), 8),)))))
+    assert plan.lanes == ()  # one remaining segment: nothing to fuse
+
+
+# -- deadlines -------------------------------------------------------------
+def test_deadline_urgent_split_and_dispatch_order():
+    """An urgent member is carved out of its shared tile into a singleton
+    tile dispatched FIRST; the remainder keeps its bucket shape."""
+    p = _planner(mode="merge", overhead=0.0)  # no merging interference
+    plan = p.plan(_items(
+        {"stage": "s", "n_tokens": 8, "deadline_left_ms": -1.0},
+        {"stage": "s", "n_tokens": 8},
+        {"stage": "s", "n_tokens": 8}))
+    assert plan.stats.deadline_urgent == 1
+    assert plan.stats.deadline_splits == 1
+    assert plan.covered_members() == [0, 1, 2]
+    first = plan.tiles[0]
+    assert first.members == (0,) and first.b_tile == 1
+    rest = plan.tiles[1]
+    assert sorted(rest.members) == [1, 2]
+    # the engine dispatches plan.tiles[:urgent_tile_count()] before lanes
+    assert plan.urgent == (0,)
+    assert plan.urgent_tile_count() == 1
+
+
+def test_deadline_urgent_members_never_merge():
+    p = _planner(mode="merge", overhead=1e9)
+    plan = p.plan(_items(
+        {"stage": "s", "n_tokens": 8, "deadline_left_ms": -1.0},
+        {"stage": "s", "n_tokens": 9}))
+    assert plan.stats.merges == 0
+    assert plan.stats.deadline_urgent == 1
+    assert plan.tiles[0].members == (0,)  # urgent first
+    assert plan.urgent == (0,) and plan.urgent_tile_count() == 1
+
+
+def test_slack_uses_modeled_remaining_work():
+    """Urgency is (time left) - (modeled remaining trajectory ms): a
+    generous deadline is not urgent, one below the modeled work is."""
+    cm = TileCostModel(dispatch_overhead_cycles=0.0, seconds_per_cycle=1e-3)
+    b = RaggedBatcher(token_tile=1, max_batch=8)
+    p = TilePlanner(b, cm, mode="full")
+    traj = _traj((("s", 4), ("t", 4)))
+    remaining_ms = cm.ms(cm.trajectory_cycles(traj))
+    assert remaining_ms > 0
+    mk = lambda left: _items({"stage": "s", "n_tokens": 4,
+                              "trajectory": traj,
+                              "deadline_left_ms": left})
+    # fusible singleton: urgent or not, it still fuses; urgency is counted
+    assert p.plan(mk(remaining_ms * 100)).stats.deadline_urgent == 0
+    assert p.plan(mk(remaining_ms * 0.5)).stats.deadline_urgent == 1
+
+
+# -- cost model ------------------------------------------------------------
+def test_cost_model_calibrate_recovers_linear_fit():
+    cm = TileCostModel()
+    a, b = 2e-4, 3e-9  # 200us overhead, ~3ns/cycle
+    samples = [(w, a + b * w) for w in (1e3, 1e4, 1e5, 1e6)]
+    fit = cm.calibrate(samples)
+    assert fit["seconds_per_cycle"] == pytest.approx(b, rel=1e-6)
+    assert fit["dispatch_overhead_cycles"] == pytest.approx(a / b, rel=1e-6)
+    assert fit["r2"] == pytest.approx(1.0, abs=1e-9)
+    assert cm.calibrated
+    assert cm.seconds_per_cycle == pytest.approx(b, rel=1e-6)
+
+
+def test_cost_model_calibrate_validates_samples():
+    cm = TileCostModel()
+    with pytest.raises(ValueError, match="2 samples"):
+        cm.calibrate([(1e3, 1e-3)])
+    with pytest.raises(ValueError, match="distinct"):
+        cm.calibrate([(1e3, 1e-3), (1e3, 2e-3)])
+    assert not cm.calibrated
+
+
+def test_cost_model_prices_engine_stage_keys():
+    """Engine stage keys (seg_idx, segment, k) route through the paper's
+    cycle model; opaque keys fall back to the quadratic proxy."""
+    from repro.configs import DEIT_SMALL
+    cfg = DEIT_SMALL.reduced()
+    cm = TileCostModel(cfg)
+    lay = cm.stage_row_cycles((1, ("layers", 0, 2), None), 16)
+    one = cm.stage_row_cycles((1, ("layers", 0, 1), None), 16)
+    assert lay == pytest.approx(2 * one)
+    assert cm.stage_row_cycles((2, ("tdm", 1), 5), 16) > 0
+    assert cm.stage_row_cycles((0, ("embed",), None), 16) > 0
+    assert cm.stage_row_cycles((4, ("head",), None), 16) > 0
+    assert cm.stage_row_cycles("opaque", 10) == 10 * 10 + 8 * 10
+
+
+# -- plan object -----------------------------------------------------------
+def test_execution_plan_hashable_and_deterministic():
+    specs = [("s", 8, _traj((("s", 8), ("t", 9)))), ("s", 9), ("u", 3)]
+    p1, p2 = _planner(mode="full"), _planner(mode="full")
+    a, b = p1.plan(_items(*specs)), p2.plan(_items(*specs))
+    assert a == b
+    assert hash(a) == hash(b)
+    assert isinstance(a, ExecutionPlan)
+    assert {a, b} == {a}
+
+
+def test_plan_item_validates_trajectory_head():
+    with pytest.raises(ValueError, match="restate"):
+        PlanItem(stage="s", n_tokens=4, trajectory=(("s", 5),))
+
+
+def test_planner_validation():
+    b = RaggedBatcher(token_tile=1, max_batch=4)
+    with pytest.raises(ValueError, match="mode"):
+        TilePlanner(b, mode="aggressive")
+    naive = RaggedBatcher(mode="naive", max_batch=4)
+    with pytest.raises(ValueError, match="balanced"):
+        TilePlanner(naive, mode="full")
+    TilePlanner(naive, mode="off")  # identity over naive is fine
+    with pytest.raises(ValueError, match="fuse_min_segments"):
+        TilePlanner(b, fuse_min_segments=0)
+    assert PLANNER_MODES == ("off", "merge", "fuse", "full")
+
+
+def test_cumulative_stats_and_trajectory_ledger():
+    p = _planner(mode="full", overhead=1e9)
+    t0 = _traj(((("L0",), 8), (("H",), 9)))
+    for _ in range(3):  # same population re-planned: ledger must not grow
+        p.plan(_items((("L0",), 8, t0), (("L1",), 4), (("L1",), 5)))
+    st = p.stats()
+    assert st["plans"] == 3
+    assert st["lanes"] == 3 and st["trajectory_count"] == 1
+    assert st["merges"] == 3  # one merge per plan
+    assert st["lane_cells"] == 3 * (8 + 9)
+    assert st["modeled_saving_cycles"] > 0
+    assert st["modeled_saving_ms"] > 0
+    assert not st["calibrated"]

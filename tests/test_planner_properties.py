@@ -1,0 +1,107 @@
+"""Property-based TilePlanner invariants (hypothesis): in every mode, an
+ExecutionPlan covers each request exactly once across tiles ∪ lanes; mode
+``off`` is tile-for-tile the RaggedBatcher identity plan; merged tiles
+respect caps and batch bounds; and the recompile ledger (bucket ∪
+trajectory keys) is bounded by the distinct shapes actually planned."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.planner import (PlanItem, TileCostModel,  # noqa: E402
+                                   TilePlanner)
+from repro.serving.ragged_batcher import RaggedBatcher  # noqa: E402
+
+_fast = settings(max_examples=50, deadline=None)
+
+# Trajectory-shaped populations: each item walks a shared 4-stage pipeline
+# (stage identity = (step index, label)) shedding tokens, mirroring how the
+# engine's trajectories align offsets with steps.
+_item = st.tuples(
+    st.integers(0, 3),             # current step in the pipeline
+    st.integers(1, 64),            # current token count
+    st.sampled_from(["a", "b"]),   # per-item pipeline flavour
+    st.floats(0.25, 1.0),          # per-step keep fraction
+)
+
+
+def _build_items(raw, n_steps=4):
+    items = []
+    for step, n, flavour, keep in raw:
+        traj = []
+        cur = n
+        for s in range(step, n_steps):
+            traj.append(((s, flavour), cur))
+            cur = max(1, int(cur * keep))
+        items.append(PlanItem(stage=traj[0][0], n_tokens=traj[0][1],
+                              trajectory=tuple(traj)))
+    return items
+
+
+@_fast
+@given(raw=st.lists(_item, min_size=1, max_size=16),
+       mode=st.sampled_from(["off", "merge", "fuse", "full"]),
+       overhead=st.sampled_from([0.0, 1e3, 1e9]),
+       max_batch=st.integers(1, 8),
+       deadline=st.sampled_from([None, -1.0, 1e12]))
+def test_plan_covers_each_item_exactly_once(raw, mode, overhead, max_batch,
+                                            deadline):
+    """The zero-drop guarantee under merging, fusion, and deadline splits:
+    tiles ∪ lanes partition the population for ANY item stream."""
+    items = _build_items(raw)
+    if deadline is not None:
+        items = [PlanItem(stage=i.stage, n_tokens=i.n_tokens,
+                          trajectory=i.trajectory,
+                          deadline_left_ms=deadline) for i in items]
+    b = RaggedBatcher(token_tile=1, max_batch=max_batch)
+    p = TilePlanner(b, TileCostModel(dispatch_overhead_cycles=overhead),
+                    mode=mode)
+    plan = p.plan(items)
+    assert plan.covered_members() == list(range(len(items)))
+    # per-tile sanity: members' real counts ride along, padding bounded
+    for t in plan.tiles:
+        assert t.n_tokens == tuple(items[m].n_tokens for m in t.members)
+        assert all(n <= t.n_tile for n in t.n_tokens)
+        assert len(t.members) <= t.b_tile
+        if b.max_batch:
+            assert len(t.members) <= b.max_batch
+    for lane in plan.lanes:
+        assert lane.trajectory == items[lane.member].trajectory
+
+
+@_fast
+@given(raw=st.lists(_item, min_size=1, max_size=16),
+       tile=st.sampled_from([1, 4]), max_batch=st.integers(1, 8))
+def test_off_mode_is_identity_for_any_population(raw, tile, max_batch):
+    """Mode 'off' == RaggedBatcher.plan, tile-for-tile (the preserved PR-4
+    bit-exact balanced path), for arbitrary populations."""
+    items = _build_items(raw)
+    specs = [(i.stage, i.n_tokens) for i in items]
+    ref = RaggedBatcher(token_tile=tile, max_batch=max_batch).plan(specs)
+    p = TilePlanner(RaggedBatcher(token_tile=tile, max_batch=max_batch),
+                    TileCostModel(), mode="off")
+    plan = p.plan(items)
+    assert list(plan.tiles) == ref and plan.lanes == ()
+
+
+@_fast
+@given(raw=st.lists(_item, min_size=1, max_size=12),
+       rounds=st.integers(1, 4),
+       mode=st.sampled_from(["merge", "fuse", "full"]))
+def test_recompile_ledger_bounded_by_bucket_union_trajectory(raw, rounds,
+                                                             mode):
+    """Replanning identical populations must not grow the ledger: the
+    distinct compile identities are exactly the bucket keys of dispatched
+    tiles plus the trajectory keys of dispatched lanes."""
+    items = _build_items(raw)
+    b = RaggedBatcher(token_tile=1, max_batch=8)
+    p = TilePlanner(b, TileCostModel(), mode=mode)
+    plans = [p.plan(items) for _ in range(rounds)]
+    tile_keys = {t.bucket_key for pl in plans for t in pl.tiles}
+    traj_keys = {l.traj_key for pl in plans for l in pl.lanes}
+    assert b.bucket_keys == tile_keys
+    assert p.trajectory_keys == traj_keys
+    assert p.trajectory_count == len(traj_keys)
+    # determinism: same items + same planner state -> identical plans
+    assert all(pl == plans[0] for pl in plans[1:])

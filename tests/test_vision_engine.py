@@ -114,6 +114,101 @@ def test_padded_modes_serve_everyone_close(packed_vit):
                                        rtol=1e-5)
 
 
+@pytest.mark.parametrize("pmode", ["merge", "fuse", "full"])
+def test_planner_modes_bitexact_and_bounded_recompiles(packed_vit, pmode):
+    """The tentpole acceptance: merged and fused ExecutionPlans produce
+    BIT-EXACT head logits vs the unmerged balanced path (planner off) and
+    vs the offline single-request oracle, with jit recompiles bounded by
+    the bucket ∪ trajectory budget."""
+    cfg, masked, packed = packed_vit
+    mixes = [(16, None, 0), (9, 0.5, 0), (4, 0.7, 1),
+             (16, 0.5, 2), (9, None, 3), (4, 0.5, 3),
+             (9, 0.5, 4)]  # uid 6 shares uid 1's bucket -> merge fodder
+
+    base = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(max_batch=3, planner="off"))
+    out_base = base.serve(_mixed_requests(cfg, mixes))
+
+    eng = VisionEngine(cfg, masked, packed,
+                       VisionEngineConfig(max_batch=3, planner=pmode))
+    reqs = _mixed_requests(cfg, mixes)
+    out = eng.serve(reqs)
+    assert sorted(out) == [r.uid for r in reqs]
+
+    st = eng.stats()
+    assert st["jit_compile_count"] <= st["compile_budget"]
+    assert st["compile_budget"] == (st["bucket_count"]
+                                    + st["trajectory_count"])
+    if pmode in ("fuse", "full"):
+        assert st["plan_lanes"] > 0  # express lanes actually ran
+
+    for r in reqs:
+        assert np.array_equal(out_base[r.uid], out[r.uid]), (
+            f"uid {r.uid}: planner {pmode} changed the logits vs the "
+            f"unmerged balanced path")
+        ref = _offline(cfg, masked, packed, r, segments=eng.segments)
+        assert np.array_equal(ref, out[r.uid])
+
+
+def test_merge_mode_actually_merges(packed_vit):
+    """With fusion disabled and a dispatch-dominated cost model, same-stage
+    neighboring buckets must bin-pack into masked tiles."""
+    from repro.serving import TileCostModel
+    cfg, masked, packed = packed_vit
+    cm = TileCostModel(cfg, dispatch_overhead_cycles=1e9)
+    eng = VisionEngine(cfg, masked, packed,
+                       VisionEngineConfig(max_batch=4, planner="merge"),
+                       cost_model=cm)
+    reqs = _mixed_requests(cfg, [(16, 0.5, 0), (9, 0.5, 0), (4, 0.5, 0)])
+    out = eng.serve(reqs)
+    st = eng.stats()
+    assert st["plan_merges"] > 0
+    assert st["batcher_padding_waste"] > 0.0  # merged tiles are masked
+    for r in reqs:
+        ref = _offline(cfg, masked, packed, r)
+        assert np.array_equal(ref, out[r.uid])
+
+
+def test_deadline_requests_split_dispatch_first_and_discount_load(
+        packed_vit):
+    """Deadline-aware tiling: an already-expired SLO makes the planner
+    carve the request out of shared tiles (counted in plan stats) while
+    results stay bit-exact; the admission annotation shrinks so
+    prune_pressure_aware prefers tight-deadline requests."""
+    cfg, masked, packed = packed_vit
+    # same size + r_t so the deadline request shares every bucket (not
+    # fusible -> must go through the split path)
+    mixes = [(9, 0.5, 0), (9, 0.5, 0), (9, 0.5, 0)]
+    reqs = _mixed_requests(cfg, mixes)
+    reqs[0].deadline_ms = 1e-6  # expired by the first plan
+    eng = VisionEngine(cfg, masked, packed,
+                       VisionEngineConfig(max_batch=3, planner="full"))
+    out = eng.serve(reqs)
+    st = eng.stats()
+    assert st["plan_deadline_urgent"] > 0
+    assert st["plan_deadline_splits"] > 0
+    for r in reqs:
+        ref = _offline(cfg, masked, packed, r)
+        assert np.array_equal(ref, out[r.uid])
+
+    # generous deadlines are not urgent
+    eng2 = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(max_batch=3, planner="full"))
+    reqs2 = _mixed_requests(cfg, mixes)
+    for r in reqs2:
+        r.deadline_ms = 1e9
+    eng2.serve(reqs2)
+    assert eng2.stats()["plan_deadline_urgent"] == 0
+
+    # the prune_pressure_aware annotation: tighter deadline -> smaller load
+    tight, loose = _mixed_requests(cfg, [(9, 0.5, 0), (9, 0.5, 0)])
+    tight.deadline_ms = 1e-6
+    eng3 = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(max_batch=1, planner="full"))
+    eng3.serve([tight, loose])
+    assert tight.prune_load < loose.prune_load
+
+
 def test_admission_policies_order_vision_requests(packed_vit):
     """shortest_prompt_first admits small images first;
     prune_pressure_aware admits by predicted post-prune token load — a
@@ -182,12 +277,20 @@ def test_validation_and_config_errors(packed_vit):
         eng.serve([VisionRequest(uid=0, patches=np.zeros((4, pdim),
                                                          np.float32),
                                  r_t=1.5)])
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.serve([VisionRequest(uid=0, patches=np.zeros((4, pdim),
+                                                         np.float32),
+                                 deadline_ms=-5.0)])
     with pytest.raises(ValueError):
         VisionEngineConfig(max_batch=0)
     with pytest.raises(ValueError):
         VisionEngineConfig(token_tile=0)
     with pytest.raises(ValueError):
         VisionEngineConfig(mode="magic")
+    with pytest.raises(ValueError):
+        VisionEngineConfig(planner="aggressive")
+    with pytest.raises(ValueError, match="balanced"):
+        VisionEngineConfig(mode="naive", planner="full")
     with pytest.raises(ValueError, match="family"):
         VisionEngine(DEIT_SMALL.reduced().replace(family="dense"),
                      masked, packed)
