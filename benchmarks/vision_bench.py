@@ -32,13 +32,23 @@ count, deadline dispatches, modeled saving).
     PYTHONPATH=src python benchmarks/vision_bench.py --smoke        # CI lane
     PYTHONPATH=src python benchmarks/vision_bench.py --smoke --planner off
 
+Every timed arm runs at ``--pipeline-depth`` (1 = synchronous), and a
+cross-depth comparison block always serves the planned mixed arm at depths
+1 and 2: outputs must be bit-identical (sha256 ``outputs_digest`` — the CI
+fast lane also compares digests between whole ``--pipeline-depth 1`` and
+``2`` artifacts), and the ``wall_vs_device`` / ``device_idle_s`` columns
+quantify how much host time the double-buffered pipeline hides behind
+device execution.
+
 A ``BENCH_vision.json`` artifact is written through the schema-versioned
 ``repro.bench`` envelope shared with serving_bench.py (``--out``
-overrides). Exit is non-zero if any mode fails to serve every request or
-exceeds its recompile budget; the full run additionally requires balanced
-bucketing to beat naive padding, ``--planner full`` to be at least as fast
-as balanced on the mixed workload, and strictly faster on the sparse
-singleton-heavy scenario (the planner's acceptance claims).
+overrides). Exit is non-zero if any mode fails to serve every request,
+exceeds its recompile budget, or disagrees across pipeline depths; the
+full run additionally requires balanced bucketing to beat naive padding,
+``--planner full`` to be at least as fast as balanced on the mixed
+workload, strictly faster on the sparse singleton-heavy scenario (the
+planner's acceptance claims), and pipeline depth 2 to idle the device
+strictly less than depth 1.
 """
 from __future__ import annotations
 
@@ -97,14 +107,28 @@ def calibrate_cost_model(cfg, masked, packed, cost_model, seed: int,
     return cost_model.calibrate(samples)
 
 
+def outputs_digest(out) -> str:
+    """Order-independent sha256 over every served logit vector — equal
+    digests mean bit-identical outputs (the cross-depth CI check compares
+    these between ``--pipeline-depth 1`` and ``2`` artifacts)."""
+    import hashlib
+
+    import numpy as np
+
+    h = hashlib.sha256()
+    for uid in sorted(out):
+        h.update(np.asarray(out[uid], np.float32).tobytes())
+    return h.hexdigest()
+
+
 def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
-             bmode: str, planner: str):
+             bmode: str, planner: str, pipeline_depth: int = 1):
     """Serve the stream twice (warmup compiles every shape on the identical
     stream — arrival dynamics replay exactly) and time the second pass."""
     from repro.serving import VisionEngine, VisionEngineConfig
 
     vc = VisionEngineConfig(max_batch=slots, mode=bmode, token_tile=1,
-                            planner=planner)
+                            planner=planner, pipeline_depth=pipeline_depth)
     engine = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model)
     engine.serve(reqs_factory())
     warm = engine.stats()
@@ -115,10 +139,19 @@ def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
     st = engine.stats()
     real = (st["batcher_real_cells"] - warm["batcher_real_cells"]
             + st["plan_lane_cells"] - warm["plan_lane_cells"])
+    # device-busy proxy: at depth 1 the host dispatches then immediately
+    # blocks, so dispatch + block wall time brackets the device's work;
+    # wall_vs_device > 1 is host overhead the pipeline can hide
+    busy = (st["pipeline_block_s"] - warm["pipeline_block_s"]
+            + st["pipeline_dispatch_s"] - warm["pipeline_dispatch_s"])
     return {
         "seconds": dt,
         "images_s": len(out) / dt,
         "cells_s": real / dt,
+        "outputs_digest": outputs_digest(out),
+        "pipeline_depth": pipeline_depth,
+        "pipeline_block_s": st["pipeline_block_s"] - warm["pipeline_block_s"],
+        "wall_vs_device": dt / max(busy, 1e-9),
         "served": len(out), "expected": len(reqs),
         "padding_waste": st["batcher_padding_waste"],
         "buckets": st["bucket_count"],
@@ -138,9 +171,60 @@ def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
     }
 
 
+def pipeline_compare(cfg, masked, packed, cost_model, reqs_factory, *,
+                     slots: int, planner: str):
+    """Serve the identical mixed stream through the planned arm at
+    pipeline depth 1 (synchronous) and 2 (double-buffered): outputs must
+    be bit-identical, and the ``wall_vs_device`` column shows how much
+    host overhead sits on top of the depth-1 device-busy proxy (dispatch
+    + block — at depth 1 the host blocks right after each dispatch, so
+    that sum brackets the device's work). ``device_idle_s`` is the
+    pipeline's measured starvation time: wall seconds with zero steps in
+    flight, i.e. the device waiting while the host plans/stages. Depth 2
+    keeps a step queued across every stage window, so on the full bench
+    it must idle the device strictly less than depth 1 — a queue-
+    occupancy fact that holds even on shared-core CPU hosts where
+    overlap cannot shrink the wall clock itself."""
+    from repro.serving import VisionEngine, VisionEngineConfig
+
+    rows = {}
+    for depth in (1, 2):
+        vc = VisionEngineConfig(max_batch=slots, mode="balanced",
+                                token_tile=1, planner=planner,
+                                pipeline_depth=depth)
+        engine = VisionEngine(cfg, masked, packed, vc,
+                              cost_model=cost_model)
+        engine.serve(reqs_factory())
+        warm = engine.stats()
+        t0 = time.time()
+        out = engine.serve(reqs_factory())
+        wall = time.time() - t0
+        st = engine.stats()
+        rows[f"depth{depth}"] = {
+            "wall_s": wall,
+            "block_s": st["pipeline_block_s"] - warm["pipeline_block_s"],
+            "dispatch_s": (st["pipeline_dispatch_s"]
+                           - warm["pipeline_dispatch_s"]),
+            "steps": st["pipeline_steps"] - warm["pipeline_steps"],
+            "overlap_hits": (st["pipeline_overlap_hits"]
+                             - warm["pipeline_overlap_hits"]),
+            "device_idle_s": (st["pipeline_starved_s"]
+                              - warm["pipeline_starved_s"]),
+            "plan_ahead_hits": st["plan_ahead_hits"],
+            "served": len(out),
+            "outputs_digest": outputs_digest(out),
+        }
+    busy_ref = rows["depth1"]["block_s"] + rows["depth1"]["dispatch_s"]
+    for r in rows.values():
+        r["wall_vs_device"] = r["wall_s"] / max(busy_ref, 1e-9)
+    rows["bitexact"] = (rows["depth1"]["outputs_digest"]
+                        == rows["depth2"]["outputs_digest"])
+    return rows
+
+
 def bench(arch: str, num: int, slots: int, arrival_spread: int,
           image_size: int, d_model: int, seed: int, planner: str,
-          calibrate: bool):
+          calibrate: bool, pipeline_depth: int = 1):
     import jax
 
     from repro.configs import get_config
@@ -176,11 +260,16 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
                                ("planned", "balanced", planner)):
         results["mixed"][mode] = run_mode(
             cfg, masked, packed, cost_model, mixed,
-            slots=slots, bmode=bmode, planner=pmode)
+            slots=slots, bmode=bmode, planner=pmode,
+            pipeline_depth=pipeline_depth)
     for mode, pmode in (("balanced", "off"), ("planned", planner)):
         results["sparse"][mode] = run_mode(
             cfg, masked, packed, cost_model, sparse,
-            slots=slots, bmode="balanced", planner=pmode)
+            slots=slots, bmode="balanced", planner=pmode,
+            pipeline_depth=pipeline_depth)
+    results["pipeline"] = pipeline_compare(
+        cfg, masked, packed, cost_model, mixed, slots=slots,
+        planner=planner)
     return results, fit
 
 
@@ -200,6 +289,11 @@ def main():
                     choices=("off", "merge", "fuse", "full"),
                     help="TilePlanner mode for the 'planned' arm (off = "
                          "A/A control against balanced)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="StepPipeline depth for every timed arm (1 = "
+                         "synchronous; 2 = stage N+1 while the device "
+                         "runs N). The cross-depth comparison block "
+                         "always runs at both depths regardless.")
     ap.add_argument("--out", default="BENCH_vision.json",
                     help="JSON artifact path")
     ap.add_argument("--smoke", action="store_true",
@@ -212,7 +306,8 @@ def main():
 
     res, fit = bench(args.arch, args.requests, args.slots,
                      args.arrival_spread, args.image_size, args.d_model,
-                     args.seed, args.planner, calibrate=not args.smoke)
+                     args.seed, args.planner, calibrate=not args.smoke,
+                     pipeline_depth=args.pipeline_depth)
     if fit:
         print(f"cost model calibrated: overhead="
               f"{fit['dispatch_overhead_cycles']:.0f} cycles "
@@ -224,6 +319,8 @@ def main():
            f"{'merges':>6s} {'lanes':>6s} {'save_ms':>8s}")
     print(hdr)
     for scen, modes in res.items():
+        if scen == "pipeline":
+            continue
         for mode, r in modes.items():
             served = f"{r['served']}/{r['expected']}"
             budget = f"{r['jit_compiles']}<={r['compile_budget']}"
@@ -249,6 +346,17 @@ def main():
           f"{plan_sparse:.2f}x (sparse); sparse saving modeled="
           f"{sparse['planned']['modeled_saving_ms']:.1f}ms measured="
           f"{measured_saving_ms:.1f}ms")
+    pipe = res["pipeline"]
+    d1, d2 = pipe["depth1"], pipe["depth2"]
+    print(f"pipeline (planned, mixed): depth1 wall={d1['wall_s']:.3f}s "
+          f"wall_vs_device={d1['wall_vs_device']:.2f} "
+          f"idle={d1['device_idle_s'] * 1e3:.0f}ms | depth2 "
+          f"wall={d2['wall_s']:.3f}s "
+          f"wall_vs_device={d2['wall_vs_device']:.2f} "
+          f"idle={d2['device_idle_s'] * 1e3:.0f}ms "
+          f"overlap={d2['overlap_hits']}/{d2['steps']} "
+          f"bitexact={pipe['bitexact']}")
+    ok &= pipe["bitexact"]
 
     from repro.bench import write_bench_artifact
     write_bench_artifact(
@@ -262,8 +370,8 @@ def main():
                "calibration": fit})
     print(f"wrote {args.out}")
     if not ok:
-        print("FAIL: unserved requests or recompile budget exceeded",
-              file=sys.stderr)
+        print("FAIL: unserved requests, recompile budget exceeded, or "
+              "pipeline depths disagreed bit-for-bit", file=sys.stderr)
         sys.exit(1)
     if not args.smoke:
         if bal_naive <= 1.0:
@@ -278,6 +386,12 @@ def main():
             print(f"FAIL: planner {args.planner} ({plan_sparse:.2f}x) must "
                   f"be strictly faster than balanced on the sparse "
                   f"singleton-heavy scenario", file=sys.stderr)
+            sys.exit(1)
+        if d2["device_idle_s"] >= d1["device_idle_s"]:
+            print(f"FAIL: pipeline depth 2 must idle the device strictly "
+                  f"less than depth 1 "
+                  f"({d2['device_idle_s'] * 1e3:.0f}ms >= "
+                  f"{d1['device_idle_s'] * 1e3:.0f}ms)", file=sys.stderr)
             sys.exit(1)
 
 

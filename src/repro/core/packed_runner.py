@@ -332,17 +332,28 @@ class PackedVitSegments:
 
     def __init__(self, cfg: ModelConfig, params: Dict,
                  packed: Dict[str, packing.PackedWeight],
-                 use_tdm: Optional[bool] = None):
+                 use_tdm: Optional[bool] = None,
+                 donate_activations: bool = False):
         self.cfg = cfg
         self.params = params
         self.packed = packed
         self.plan = vit_segments(cfg, use_tdm)
+        self.donate_activations = donate_activations
+        # Only the "layers" segment preserves the activation shape
+        # [B, n, D] input->output, so only its input tile is donatable
+        # (embed/tdm/head change shapes — donating them would just warn
+        # and allocate anyway). Donation requires callers never to re-read
+        # a dispatched tile: the serving engine stages a fresh padded
+        # batch per tile and forward_vit_packed rebinds x each segment,
+        # so both satisfy it; keep the default off for ad-hoc callers
+        # that reuse inputs across calls (e.g. timing probes).
+        don = dict(donate_argnums=(2,)) if donate_activations else {}
         self._embed = jax.jit(
             lambda params, patches: vit_embed(cfg, params, patches))
         self._layers = jax.jit(
             lambda params, packed, x, n_valid, lo, hi: vit_layers(
                 cfg, params, packed, x, lo, hi, n_valid=n_valid),
-            static_argnames=("lo", "hi"))
+            static_argnames=("lo", "hi"), **don)
         self._tdm = jax.jit(
             lambda params, packed, x, n_valid, layer, k: vit_tdm_layer(
                 cfg, params, packed, x, layer, k=k, n_valid=n_valid),

@@ -59,7 +59,7 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
           max_new: int = 16, kv_prune: float = 1.0, reduced: bool = True,
           max_batch: int = 4, seed: int = 0, continuous: bool = False,
           elastic_drop: int = 0, per_slot_prefill: bool = True,
-          policy: str = "fifo"):
+          policy: str = "fifo", pipeline_depth: int = 1):
     if elastic_drop and not continuous:
         raise ValueError("--elastic-drop requires --continuous: only the "
                          "slot path probes device_count() between steps")
@@ -72,7 +72,8 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
         max_len=prompt_len + 2 * max_new + 8,
         kv_prune_interval=4 if kv_prune < 1.0 else 0,
         kv_prune_keep=kv_prune,
-        per_slot_prefill=per_slot_prefill)
+        per_slot_prefill=per_slot_prefill,
+        pipeline_depth=pipeline_depth)
     rng = np.random.default_rng(seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, prompt_len,
@@ -113,6 +114,11 @@ def main():
                     help="admission policy: fifo | shortest_prompt_first "
                          "| prune_pressure_aware (shared with the vision "
                          "path)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="StepPipeline depth for the continuous path: 1 "
+                         "= synchronous stepping (the reference path), 2 "
+                         "= stage step N+1 while the device executes "
+                         "step N (bit-exact)")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
@@ -120,7 +126,7 @@ def main():
                 args.kv_prune, args.reduced, max_batch=args.max_batch,
                 continuous=args.continuous, elastic_drop=args.elastic_drop,
                 per_slot_prefill=not args.no_slot_prefill,
-                policy=args.policy)
+                policy=args.policy, pipeline_depth=args.pipeline_depth)
     if args.json:
         print(json.dumps({
             "outputs": {str(k): v for k, v in out["outputs"].items()},

@@ -86,7 +86,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
           mode: str = "balanced", token_tile: int = 1,
           policy: str = "fifo", image_size: int = 0,
           arrival_spread: int = 4, seed: int = 0,
-          planner: str = "full", deadline_ms: float = 0.0):
+          planner: str = "full", deadline_ms: float = 0.0,
+          pipeline_depth: int = 1):
     cfg = get_config(arch).reduced()
     if image_size:
         cfg = cfg.replace(image_size=image_size)
@@ -96,7 +97,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
     if mode == "naive":
         planner = "off"  # naive padding has no buckets to plan over
     vc = VisionEngineConfig(max_batch=slots, mode=mode,
-                            token_tile=token_tile, planner=planner)
+                            token_tile=token_tile, planner=planner,
+                            pipeline_depth=pipeline_depth)
     engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
                                       policy=policy)
     reqs = make_requests(cfg, num_requests, arrival_spread, seed,
@@ -134,13 +136,17 @@ def main():
                     help="override the reduced config's image size")
     ap.add_argument("--arrival-spread", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="StepPipeline depth: 1 = synchronous stepping "
+                         "(the reference path), 2 = stage/plan step N+1 "
+                         "while the device executes step N (bit-exact)")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.slots, args.mode,
                 args.token_tile, args.policy, args.image_size,
                 args.arrival_spread, args.seed, args.planner,
-                args.deadline_ms)
+                args.deadline_ms, args.pipeline_depth)
     if args.json:
         print(json.dumps({
             "top1": {str(u): int(np.argmax(lg))

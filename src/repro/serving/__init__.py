@@ -9,11 +9,19 @@ execution planning over the ``RaggedBatcher``'s token-count buckets:
 bucket merging, express-lane fusion, deadline-aware tiling) +
 ``core.packed_runner.PackedVitSegments`` compose into ``VisionEngine`` —
 continuous-batching inference for the packed, simultaneously-pruned ViT.
+
+Both engines drive their step loops through the ``StepPipeline``
+(``repro.serving.pipeline``): steps are staged (plan + input buffers),
+dispatched asynchronously, and completed (blocked + materialized) as
+separate phases, so at ``pipeline_depth`` 2 the host plans and stages step
+N+1 while the device executes step N. Depth 1 reproduces the synchronous
+path step for step.
 """
 from repro.serving.cache_manager import (KVCacheManager, bucket_length,
                                          prune_kv_caches)
 from repro.serving.engine import (ElasticContext, EngineConfig, Request,
                                   ServeEngine)
+from repro.serving.pipeline import StagedStep, StepPipeline
 from repro.serving.planner import (PLANNER_MODES, ExecutionPlan, FusedLane,
                                    PlanItem, PlanStats, TileCostModel,
                                    TilePlanner)
@@ -26,6 +34,7 @@ from repro.serving.vision import (VisionEngine, VisionEngineConfig,
 __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
            "Scheduler", "KVCacheManager", "ModelRunner", "prune_kv_caches",
            "bucket_length", "build_padded_batch",
+           "StepPipeline", "StagedStep",
            "VisionEngine", "VisionEngineConfig", "VisionRequest",
            "RaggedBatcher", "Tile",
            "TilePlanner", "TileCostModel", "ExecutionPlan", "PlanItem",

@@ -111,6 +111,30 @@ class KVCacheManager:
         inactive rows are never read)."""
         self.active[slot] = False
 
+    def snapshot(self) -> Tuple:
+        """Capture the full manager state for the pipelined engine's stage
+        rollback: a step staged then dropped (mid-step admission forces a
+        replan) must leave no trace — counters, host mirrors, and the cache
+        binding all return to their pre-stage values. The device cache
+        pytree is captured by *reference*: stage-time ops (``maybe_prune``)
+        REBIND ``self.caches`` to new arrays and never mutate buffers in
+        place, so the old handle stays valid exactly until a dispatch
+        donates it — and dropped steps never dispatch."""
+        return (self.caches, self.lengths.copy(), self.starts.copy(),
+                self.active.copy(), self.steps_since_prune,
+                self.prune_events)
+
+    def restore(self, snap: Tuple) -> None:
+        """Inverse of :meth:`snapshot` (mirror arrays keep their identity —
+        callers hold views)."""
+        caches, lengths, starts, active, since, events = snap
+        self.caches = caches
+        self.lengths[:] = lengths
+        self.starts[:] = starts
+        self.active[:] = active
+        self.steps_since_prune = since
+        self.prune_events = events
+
     def set_batch_state(self, lengths, starts) -> None:
         """Adopt mirrors after a whole-batch (re-)prefill replaced every
         row at once (fallback path: recurrent families, elastic rebuild)."""

@@ -39,6 +39,16 @@ matters: attention and the KV ``attn_mass`` accumulation both exclude
 positions before ``valid_start``, so pad slots never compete with real
 tokens — neither in attention nor in KV-cache pruning.
 
+The continuous path is driven through the ``StepPipeline``
+(``repro.serving.pipeline``): each step is staged (host bookkeeping,
+snapshot-protected so a mid-step submission can drop and restage it),
+dispatched asynchronously (the device calls chain through pending cache and
+next-token handles; the jitted steps donate their cache argument so XLA
+reuses the buffers in place), and completed (token values materialize into
+``req.generated``) as separate phases. ``EngineConfig.pipeline_depth`` 2
+overlaps the host's staging of step N+1 with the device executing step N;
+depth 1 reproduces the synchronous loop step for step.
+
 KV pruning is the paper's token-scoring adapted to autoregressive decode:
 attention mass accumulated per cached token ranks cache entries; every
 ``kv_prune_interval`` steps the KVCacheManager compacts each layer's cache
@@ -63,11 +73,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.dist.elastic import MeshPlan, degradation_path, first_fit
 from repro.serving.cache_manager import KVCacheManager, prune_kv_caches
+from repro.serving.pipeline import StagedStep, StepPipeline
 from repro.serving.runner import ModelRunner, build_padded_batch
 from repro.serving.scheduler import Scheduler
 
@@ -95,6 +107,10 @@ class EngineConfig:
     kv_prune_keep: float = 1.0
     per_slot_prefill: bool = True   # False: PR-2 whole-batch re-prefill
     prefill_bucket_min: int = 8     # smallest prefix-length bucket
+    pipeline_depth: int = 1     # StepPipeline depth: 1 = synchronous,
+    # 2 = double-buffered (the host stages step N+1 — admission
+    # accounting, prune cadence, decode bookkeeping — while the device
+    # executes step N; tokens and events bit-exact at any depth)
 
     def __post_init__(self):
         if self.max_batch <= 0:
@@ -119,6 +135,10 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.prefill_bucket_min must be a positive "
                 f"bucket width, got {self.prefill_bucket_min}")
+        if self.pipeline_depth <= 0:
+            raise ValueError(
+                f"EngineConfig.pipeline_depth must be >= 1 (1 = "
+                f"synchronous stepping), got {self.pipeline_depth}")
 
 
 @dataclasses.dataclass
@@ -152,9 +172,17 @@ class ServeEngine:
         self.runner = ModelRunner(cfg, params)
         self.cache = KVCacheManager(cfg, ec)
         self.scheduler = Scheduler(ec.max_batch, policy=policy)
+        self.pipeline = StepPipeline(ec.pipeline_depth)
         self._plan = elastic.plan if elastic is not None else None
         # padded tokens run through prefill at admissions (and rebuilds)
         self.admission_prefill_tokens = 0
+        # pipelined continuous-path state: the device-resident next-token
+        # vector chained step to step, and the host-side count of tokens
+        # DISPATCHED per request uid (>= len(req.generated) until the
+        # pipeline completes the step) — retirement is decided from the
+        # counts, so slot reuse never blocks on in-flight device work
+        self._toks: Any = None
+        self._scheduled: Dict[int, int] = {}
 
     # -- compatibility surface (PR-2 attribute names) ----------------------
     @property
@@ -202,6 +230,7 @@ class ServeEngine:
             "compile_count": self.runner.compile_count,
             "jit_compile_count": self.runner.jit_compile_count(),
             "prune_events": self.cache.prune_events,
+            **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
         }
 
     def _annotate_prune_load(self, requests: List[Request]) -> None:
@@ -247,12 +276,20 @@ class ServeEngine:
     # -- continuous-batching path ------------------------------------------
     def _serve_continuous(self, requests: List[Request]
                           ) -> Dict[int, List[int]]:
-        """``max_batch`` decode slots with per-request admission. Each loop
-        iteration produces at most one token per slot: per-slot prefill for
-        slots admitted this iteration, or one batched decode step for the
-        slots already live (interleaving differs from PR-2's re-prefill
-        loop but per-request token sequences are identical — rows are
-        independent)."""
+        """``max_batch`` decode slots with per-request admission, driven
+        through the ``StepPipeline``. Each step produces at most one token
+        per slot: per-slot prefill for slots admitted this step, or one
+        batched decode step for the slots already live. Steps are *staged*
+        (admission accounting, prune cadence, decode bookkeeping — all
+        host mutations, snapshot-protected), *dispatched* (the device
+        calls, chaining the pending next-token vector and cache handles)
+        and *completed* (token values materialize into ``req.generated``)
+        as separate phases, so at depth 2 the host stages step N+1 while
+        the device executes step N. Which step finishes a request is
+        host-known at dispatch time (one token per produced slot), so
+        retirement and slot reuse never block on in-flight device work.
+        Depth 1 reproduces the synchronous loop step for step — identical
+        tokens, identical admit/retire/degrade event stream."""
         sched, kvm, runner = self.scheduler, self.cache, self.runner
         use_slot = runner.supports_slot_prefill and self.ec.per_slot_prefill
         sched.submit(requests)
@@ -260,40 +297,154 @@ class ServeEngine:
             kvm.reset()  # per-slot admissions write into live caches;
             # the fallback's whole-batch prefill allocates its own
         out: Dict[int, List[int]] = {}
-        toks = np.zeros((self.ec.max_batch,), np.int64)
+        self._toks = np.zeros((self.ec.max_batch,), np.int64)
+        self._scheduled = {}
         rebuild = False  # caches must be rebuilt by a whole-batch prefill
 
-        while sched.has_work():
+        while True:
+            self._retire_scheduled()
+            if not sched.has_work():
+                break
             if self.elastic is not None:
                 avail = self.elastic.device_count()
                 if avail < self._plan.num_devices:
+                    # in-flight steps ran on the healthy mesh and their
+                    # outputs stay valid; drain them so every
+                    # req.generated is materialized before the rebuild
+                    # re-prefills prompt + generated-so-far
+                    self.pipeline.flush()
                     self._degrade(avail)
                     rebuild = True  # re-prefill on the degraded mesh
-            admitted = sched.schedule()
-            if rebuild or (admitted and not use_slot):
-                toks = (self._rebuild_per_slot() if use_slot
-                        else self._reprefill_active())
-                produced = set(sched.running.keys())
-                rebuild = False
-            elif admitted:
-                for slot, req in admitted:
-                    lb, _ = kvm.admit(slot, len(req.prompt),
-                                      req.max_new_tokens)
-                    tok, kvm.caches = runner.prefill_slot(
-                        np.asarray(req.prompt, np.int32), kvm.caches,
-                        slot, lb)
-                    toks[slot] = tok
-                    self.admission_prefill_tokens += lb
-                produced = {slot for slot, _ in admitted}
-            else:
-                kvm.maybe_prune()
-                kvm.on_decode()
-                tok_dev, kvm.caches = runner.decode(toks, kvm.caches,
-                                                    kvm.valid_starts())
-                toks = np.asarray(tok_dev).astype(np.int64)
-                produced = set(sched.running.keys())
-            self._append_and_retire(toks, produced, out)
+            staged: Optional[StagedStep] = None
+            admitted: List[Tuple[int, Request]] = []
+            while True:
+                sub_mark = sched.submitted_total
+                admitted.extend(sched.schedule())
+                if rebuild or (admitted and not use_slot):
+                    break  # sync fallback below; nothing staged to drop
+                staged = (self._stage_admissions(admitted, out)
+                          if admitted else self._stage_decode(out))
+                if sched.submitted_total == sub_mark:
+                    break
+                # submitted while staging: drop + restage so the request
+                # is considered for THIS step's admissions — it never
+                # mutates a step already staged, and is never silently
+                # deferred past a step boundary
+                self.pipeline.drop(staged)
+                staged = None
+            if staged is not None:
+                self.pipeline.submit(staged)
+                continue
+            # sync fallback (recurrent families, elastic rebuild): a
+            # whole-batch/per-slot re-prefill replaces every cache row at
+            # once from prompt + generated-so-far, so drain the pipeline
+            # first, then account the rebuilt step synchronously
+            self.pipeline.flush()
+            toks = (self._rebuild_per_slot() if use_slot
+                    else self._reprefill_active())
+            rebuild = False
+            produced = [(s, sched.running[s]) for s in sorted(sched.running)]
+            for _, req in produced:
+                self._scheduled[req.uid] = \
+                    self._scheduled.get(req.uid, 0) + 1
+            self._toks = toks
+            self._complete_tokens(toks, produced, out)
+        self.pipeline.flush()
         return out
+
+    def _stage_admissions(self, admitted: List[Tuple[int, "Request"]],
+                          out: Dict[int, List[int]]) -> StagedStep:
+        """Stage one admission step: the capacity checks and mirror
+        bookkeeping (``kvm.admit``) run now; the per-slot prefills and the
+        next-token scatter dispatch later, chained through the pending
+        cache/token handles."""
+        kvm, runner = self.cache, self.runner
+        snap = kvm.snapshot()
+        plan: List[Tuple[int, Request, np.ndarray, int]] = []
+        for slot, req in admitted:
+            lb, _ = kvm.admit(slot, len(req.prompt), req.max_new_tokens)
+            plan.append((slot, req, np.asarray(req.prompt, np.int32), lb))
+
+        def dispatch():
+            toks = jnp.asarray(self._toks, jnp.int32)
+            caches = kvm.caches
+            for slot, req, prompt, lb in plan:
+                tok1, caches = runner.prefill_slot_async(prompt, caches,
+                                                         slot, lb)
+                toks = toks.at[slot].set(tok1[0])
+                self.admission_prefill_tokens += lb
+                self._scheduled[req.uid] = \
+                    self._scheduled.get(req.uid, 0) + 1
+            kvm.caches = caches
+            self._toks = toks
+            return toks
+
+        def complete(toks_dev):
+            self._complete_tokens(np.asarray(toks_dev),
+                                  [(s, r) for s, r, _, _ in plan], out)
+
+        return StagedStep(dispatch=dispatch, complete=complete,
+                          rollback=lambda: kvm.restore(snap),
+                          label=f"lm-prefill-x{len(plan)}")
+
+    def _stage_decode(self, out: Dict[int, List[int]]) -> StagedStep:
+        """Stage one batched decode step: prune cadence and write-position
+        accounting (with their overflow checks) run now against the host
+        mirrors; the decode itself dispatches later against the pending
+        cache handle. ``maybe_prune`` may rebind ``kvm.caches`` to freshly
+        dispatched compacted arrays — the snapshot keeps the pre-prune
+        handle so a drop rewinds cleanly (nothing was donated yet)."""
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        snap = kvm.snapshot()
+        kvm.maybe_prune()
+        kvm.on_decode()
+        starts = kvm.valid_starts()
+        produced = [(s, sched.running[s]) for s in sorted(sched.running)]
+
+        def dispatch():
+            tok_dev, kvm.caches = runner.decode(self._toks, kvm.caches,
+                                                starts)
+            self._toks = tok_dev
+            for _, req in produced:
+                self._scheduled[req.uid] = \
+                    self._scheduled.get(req.uid, 0) + 1
+            return tok_dev
+
+        def complete(toks_dev):
+            self._complete_tokens(np.asarray(toks_dev), produced, out)
+
+        return StagedStep(dispatch=dispatch, complete=complete,
+                          rollback=lambda: kvm.restore(snap),
+                          label="lm-decode")
+
+    def _complete_tokens(self, toks: np.ndarray,
+                         produced: List[Tuple[int, "Request"]],
+                         out: Dict[int, List[int]]) -> None:
+        """Materialize this step's token for every slot that produced one;
+        a request that reached its budget is marked done and its output
+        recorded. Slot/event bookkeeping is ``_retire_scheduled``'s — it
+        runs at the next step boundary, which keeps the admit/retire
+        stream identical to the synchronous path's."""
+        for slot, req in produced:
+            req.generated.append(int(toks[slot]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                out[req.uid] = list(req.generated)
+
+    def _retire_scheduled(self) -> None:
+        """Free every slot whose request has had its full token budget
+        DISPATCHED (host-side count — no device sync): the values may
+        still be in flight, but which step finishes a request is known at
+        dispatch time, so retirement and slot reuse never wait on the
+        device. The completion closures fill ``req.generated`` / ``out``
+        when the tokens materialize."""
+        sched, kvm = self.scheduler, self.cache
+        for slot in sorted(sched.running):
+            req = sched.running[slot]
+            if self._scheduled.get(req.uid, 0) >= req.max_new_tokens:
+                sched.retire(slot)
+                kvm.free(slot)
+                self._scheduled.pop(req.uid, None)
 
     # -- shared helpers ----------------------------------------------------
     def _append_and_retire(self, toks: np.ndarray, produced, out) -> None:

@@ -154,6 +154,22 @@ class ExecutionPlan:
         u = set(self.urgent)
         return sum(1 for t in self.tiles if any(m in u for m in t.members))
 
+    def staging_meta(self) -> Tuple[Tuple, ...]:
+        """Per-tile staging recipe, one entry per tile in dispatch order:
+        ``(members, n_tokens, n_tile, b_tile, needs_mask, n_valid)`` where
+        ``n_valid`` is the full padded-row valid-count vector (real counts
+        then ``n_tile`` for batch-pad rows) or ``None`` when no row is
+        token-padded. Hashable and device-free — the pipelined engines
+        build step N+1's input buffers from this while step N executes."""
+        out = []
+        for t in self.tiles:
+            nv = None
+            if t.needs_mask:
+                nv = t.n_tokens + (t.n_tile,) * (t.b_tile - len(t.members))
+            out.append((t.members, t.n_tokens, t.n_tile, t.b_tile,
+                        t.needs_mask, nv))
+        return tuple(out)
+
 
 # ===========================================================================
 # Cost model
@@ -312,19 +328,129 @@ class TilePlanner:
 
     # -- public API --------------------------------------------------------
     def plan(self, items: Sequence[PlanItem]) -> ExecutionPlan:
-        """Emit the :class:`ExecutionPlan` for one step's population.
+        """Emit the :class:`ExecutionPlan` for one step's population and
+        fold it into the cumulative ledgers (build + :meth:`commit`).
         Deterministic: identical items + planner config -> identical plan."""
+        return self.commit(self._build(list(items)))
+
+    def plan_ahead(self, items: Sequence[PlanItem],
+                   horizon: int) -> List[ExecutionPlan]:
+        """Speculative plans for this step and up to ``horizon - 1``
+        predicted successors. Plans are hashable, deterministic values, so
+        they CAN be computed before the device work that realizes them —
+        the pipelined engines stage plan N+1 while plan N executes, then
+        :meth:`commit` only what actually dispatches (nothing here touches
+        the cumulative ledgers or the batcher's padding stats).
+
+        Prediction semantics: every live item advances one trajectory
+        offset per step; lane-fused members and items at their last
+        segment leave the population (:meth:`advance_items` is the same
+        rule, exposed for the engines' cache-validity fingerprints).
+        Deadlines are not propagated — urgency is wall-clock-scoped to the
+        step that observes it, so speculative successors carry none (the
+        engines skip lookahead caching for deadline-bearing populations).
+
+        The trajectory-singleton (express-lane) check is memoized across
+        the horizon: the pairwise last-collision offsets are computed once
+        (one O(n²·L) trajectory scan) and each successor's fusible set is
+        derived from them by integer comparison — item ``i`` is solo at
+        horizon step ``h`` iff its last collision with every still-live
+        item falls before ``h``.
+        """
+        if horizon < 1:
+            raise ValueError(f"plan_ahead horizon must be >= 1, "
+                             f"got {horizon}")
+        items = list(items)
+        plans = [self._build(items)]
+        if horizon == 1:
+            return plans
+        fuse_on = self.mode in ("fuse", "full")
+        maxcol = self._pairwise_last_collision(items) if fuse_on else None
+        cur, orig = items, list(range(len(items)))
+        for h in range(1, horizon):
+            cur, kept = self._advance(cur, plans[-1])
+            orig = [orig[ci] for ci in kept]
+            if not cur:
+                break
+            fused_members = None
+            if fuse_on:
+                fused_members = {
+                    ci for ci, oi in enumerate(orig)
+                    if len(cur[ci].trajectory) >= self.fuse_min_segments
+                    and all(maxcol[oi][oj] < h
+                            for cj, oj in enumerate(orig) if cj != ci)}
+            plans.append(self._build(cur, fused_members=fused_members))
+        return plans
+
+    def commit(self, plan: ExecutionPlan) -> ExecutionPlan:
+        """Fold a plan that is actually dispatching into the cumulative
+        ledgers (planner counters, trajectory-key set, batcher padding
+        stats). The engines call this from the pipeline's dispatch phase —
+        a staged-then-dropped plan never touches the ledgers, so replans
+        leak no accounting (the staged-state audit's planner half)."""
+        st = plan.stats
+        self.plans += 1
+        self.merges += st.merges
+        self.lanes_planned += st.lanes
+        self.lane_cells += sum(l.real_cells for l in plan.lanes)
+        self.fused_segments += st.fused_segments
+        self.deadline_urgent += st.deadline_urgent
+        self.deadline_splits += st.deadline_splits
+        self.modeled_cycles += st.modeled_cycles
+        self.base_cycles += st.base_cycles
+        for l in plan.lanes:
+            self.trajectory_keys.add(l.traj_key)
+        self.batcher.record(plan.tiles)
+        return plan
+
+    def advance_items(self, items: Sequence[PlanItem],
+                      plan: ExecutionPlan) -> List[PlanItem]:
+        """Predicted next-step population after ``plan`` runs over
+        ``items``: lane-fused members run to completion and leave, items
+        at their last trajectory segment retire, everything else advances
+        one offset (caps and deadlines are not propagated — a cap only
+        binds at the embed stage, which no advanced item revisits)."""
+        return self._advance(items, plan)[0]
+
+    @staticmethod
+    def _advance(items: Sequence[PlanItem], plan: ExecutionPlan
+                 ) -> Tuple[List[PlanItem], List[int]]:
+        fused = {l.member for l in plan.lanes}
+        nxt: List[PlanItem] = []
+        kept: List[int] = []
+        for i, it in enumerate(items):
+            if i in fused or len(it.trajectory) <= 1:
+                continue
+            traj = it.trajectory[1:]
+            nxt.append(PlanItem(stage=traj[0][0], n_tokens=traj[0][1],
+                                trajectory=traj))
+            kept.append(i)
+        return nxt, kept
+
+    def _build(self, items: Sequence[PlanItem],
+               fused_members: Optional[Set[int]] = None) -> ExecutionPlan:
+        """Pure plan construction — no ledger mutation (see
+        :meth:`commit`). ``fused_members`` overrides the express-lane
+        singleton scan with a precomputed set (``plan_ahead``'s memoized
+        horizon steps); ``None`` runs the exact pairwise scan."""
         raw = [(it.stage, it.n_tokens) if it.cap is None
                else (it.stage, it.n_tokens, it.cap) for it in items]
         base_tiles = self.batcher.partition(raw)
 
         if self.mode == "off":
-            stats = self._finalize(base_tiles, [], items, base_tiles,
-                                   merges=0, urgent=set(), splits=0)
+            stats = self._plan_stats(base_tiles, [], items, base_tiles,
+                                     merges=0, urgent=set(), splits=0)
             return ExecutionPlan(tuple(base_tiles), (), stats, ())
 
         urgent = self._urgent_members(items)
-        lanes = (self._fuse(items) if self.mode in ("fuse", "full") else [])
+        if self.mode in ("fuse", "full"):
+            if fused_members is None:
+                lanes = self._fuse(items)
+            else:
+                lanes = [FusedLane(member=i, trajectory=items[i].trajectory)
+                         for i in sorted(fused_members)]
+        else:
+            lanes = []
         fused = {l.member for l in lanes}
         # a fusible item is by construction a singleton in its current
         # bucket, so removing it removes exactly its singleton tile
@@ -335,8 +461,8 @@ class TilePlanner:
         if self.mode in ("merge", "full"):
             tiles, merges = self._merge(tiles, items, exclude=urgent)
         tiles = self._order(tiles, urgent)
-        stats = self._finalize(tiles, lanes, items, base_tiles,
-                               merges=merges, urgent=urgent, splits=splits)
+        stats = self._plan_stats(tiles, lanes, items, base_tiles,
+                                 merges=merges, urgent=urgent, splits=splits)
         return ExecutionPlan(tuple(tiles),
                              tuple(sorted(lanes, key=lambda l: l.member)),
                              stats, tuple(sorted(urgent)))
@@ -446,6 +572,30 @@ class TilePlanner:
                 lanes.append(FusedLane(member=i, trajectory=it.trajectory))
         return lanes
 
+    def _pairwise_last_collision(self, items: Sequence[PlanItem]
+                                 ) -> List[List[int]]:
+        """``maxcol[i][j]`` = largest trajectory offset at which items
+        ``i`` and ``j`` would land in the same bucket (-1 = never). One
+        O(n²·L) scan; ``plan_ahead`` derives every horizon step's fusible
+        set from it by comparison — ``i`` is solo among a live set at
+        offset ``h`` iff ``maxcol[i][j] < h`` for every live ``j`` (no
+        collision at or past ``h``), which is exactly :meth:`_fuse`'s
+        pairwise check on the advanced trajectories."""
+        tt = self.batcher.tile_tokens
+        trajs = [it.trajectory or ((it.stage, it.n_tokens),) for it in items]
+        n = len(items)
+        maxcol = [[-1] * n for _ in range(n)]
+        for i in range(n):
+            for j in range(i + 1, n):
+                m = -1
+                ti, tj = trajs[i], trajs[j]
+                for d in range(min(len(ti), len(tj))):
+                    if (ti[d][0] == tj[d][0]
+                            and tt(ti[d][1]) == tt(tj[d][1])):
+                        m = d
+                maxcol[i][j] = maxcol[j][i] = m
+        return maxcol
+
     # -- bucket merging ----------------------------------------------------
     def _merge(self, tiles: List[Tile], items: Sequence[PlanItem],
                exclude: Set[int]) -> Tuple[List[Tile], int]:
@@ -507,9 +657,11 @@ class TilePlanner:
                                                   t.members)))
         return sorted(tiles, key=key)
 
-    def _finalize(self, tiles: List[Tile], lanes: List[FusedLane],
-                  items: Sequence[PlanItem], base_tiles: List[Tile],
-                  merges: int, urgent: Set[int], splits: int) -> PlanStats:
+    def _plan_stats(self, tiles: List[Tile], lanes: List[FusedLane],
+                    items: Sequence[PlanItem], base_tiles: List[Tile],
+                    merges: int, urgent: Set[int], splits: int) -> PlanStats:
+        """Per-plan accounting only — the cumulative ledgers are folded by
+        :meth:`commit` when (and only when) the plan dispatches."""
         cm = self.cost_model
         fused = {l.member for l in lanes}
         modeled = (sum(cm.tile_cycles(t) for t in tiles)
@@ -521,22 +673,8 @@ class TilePlanner:
                    if not (len(t.members) == 1 and t.members[0] in fused))
         base += sum(cm.trajectory_cycles(items[l.member].trajectory)
                     for l in lanes)
-        stats = PlanStats(
+        return PlanStats(
             tiles=len(tiles), lanes=len(lanes), merges=merges,
             fused_segments=sum(len(l.trajectory) for l in lanes),
             deadline_urgent=len(urgent), deadline_splits=splits,
             modeled_cycles=modeled, base_cycles=base)
-        # fold into the cumulative ledgers
-        self.plans += 1
-        self.merges += merges
-        self.lanes_planned += len(lanes)
-        self.lane_cells += sum(l.real_cells for l in lanes)
-        self.fused_segments += stats.fused_segments
-        self.deadline_urgent += len(urgent)
-        self.deadline_splits += splits
-        self.modeled_cycles += modeled
-        self.base_cycles += base
-        for l in lanes:
-            self.trajectory_keys.add(l.traj_key)
-        self.batcher.record(tiles)
-        return stats

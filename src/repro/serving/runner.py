@@ -45,16 +45,28 @@ def build_padded_batch(prefixes: Sequence[Optional[np.ndarray]],
 
 
 class ModelRunner:
-    """Jitted step functions for one (cfg, params) pair."""
+    """Jitted step functions for one (cfg, params) pair.
 
-    def __init__(self, cfg: ModelConfig, params: Any):
+    ``donate_caches`` donates the cache pytree argument of every step to
+    its output (``donate_argnums``): prefill/decode consume a cache state
+    and return the successor of identical shapes/dtypes, so XLA reuses the
+    buffers in place instead of allocating a fresh cache tree per step.
+    The serving engines always rebind ``kvm.caches`` to the returned tree,
+    which is exactly the discipline donation requires (reading a donated
+    input afterwards raises — the engines never do). Disable it for
+    callers that hold on to pre-step cache references."""
+
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 donate_caches: bool = True):
         self.cfg = cfg
         self.params = params
+        self.donate_caches = donate_caches
         self.masked = cfg.family in ST.MASKABLE_FAMILIES
         self.supports_slot_prefill = cfg.family in ST.SLOT_PREFILL_FAMILIES
-        self._prefill = jax.jit(ST.make_prefill(cfg))
-        self._decode = jax.jit(ST.make_decode_step(cfg))
-        self._prefill_slot = (jax.jit(ST.make_prefill_slot(cfg))
+        don = dict(donate_argnums=(2,)) if donate_caches else {}
+        self._prefill = jax.jit(ST.make_prefill(cfg), **don)
+        self._decode = jax.jit(ST.make_decode_step(cfg), **don)
+        self._prefill_slot = (jax.jit(ST.make_prefill_slot(cfg), **don)
                               if self.supports_slot_prefill else None)
         self._compiled: set = set()
 
@@ -73,7 +85,19 @@ class ModelRunner:
                      bucket_len: int) -> Tuple[int, Any]:
         """Prefill one prompt into batch row ``slot`` of the live caches,
         padded to ``bucket_len`` (from ``KVCacheManager.admit``). Returns
-        (next_token as int, caches)."""
+        (next_token as int, caches) — the synchronous wrapper over
+        :meth:`prefill_slot_async` (materializing the token blocks)."""
+        tok, caches = self.prefill_slot_async(prompt, caches, slot,
+                                              bucket_len)
+        return int(np.asarray(tok)[0]), caches
+
+    def prefill_slot_async(self, prompt: np.ndarray, caches: Any, slot: int,
+                           bucket_len: int) -> Tuple[jax.Array, Any]:
+        """Async per-slot prefill: identical dispatch to
+        :meth:`prefill_slot` but returns the next-token as a pending
+        device handle ([1] array) instead of blocking on it — the
+        pipelined continuous path chains it into the decode token vector
+        and lets the ``StepPipeline`` block at completion time."""
         if self._prefill_slot is None:
             raise RuntimeError(
                 f"per-slot prefill unsupported for family "
@@ -84,9 +108,8 @@ class ModelRunner:
         batch = {"tokens": jnp.asarray(row),
                  "valid_start": jnp.asarray([bucket_len - P], jnp.int32)}
         self._compiled.add(("prefill_slot", bucket_len))
-        tok, caches = self._prefill_slot(self.params, batch, caches,
-                                         jnp.asarray(slot, jnp.int32))
-        return int(np.asarray(tok)[0]), caches
+        return self._prefill_slot(self.params, batch, caches,
+                                  jnp.asarray(slot, jnp.int32))
 
     def decode(self, tokens: np.ndarray, caches: Any,
                valid_start: Optional[jax.Array]) -> Tuple[jax.Array, Any]:

@@ -98,10 +98,17 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}   # slot -> request
         self.events: List[Tuple[str, Any]] = []
+        # monotone submission counter: the pipelined engines snapshot it
+        # when they stage a step and compare before dispatch — a request
+        # submitted while a plan is in flight lands in the NEXT plan
+        # (stage is rolled back and rebuilt), never mutates the one being
+        # staged, and is never silently deferred past a step boundary
+        self.submitted_total = 0
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> None:
         self.waiting.extend(requests)
+        self.submitted_total += len(requests)
 
     def free_slots(self) -> List[int]:
         return [i for i in range(self.num_slots) if i not in self.running]

@@ -49,6 +49,7 @@ from repro.configs.base import ModelConfig
 from repro.core import packed_runner as PR
 from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
                                    TilePlanner)
+from repro.serving.pipeline import StagedStep, StepPipeline
 from repro.serving.ragged_batcher import RaggedBatcher
 from repro.serving.scheduler import Scheduler
 
@@ -83,11 +84,17 @@ class VisionEngineConfig:
     mode: str = "balanced"    # 'balanced' buckets | 'naive' pad-to-max
     planner: str = "off"      # TilePlanner mode: off|merge|fuse|full
     use_tdm: Optional[bool] = None   # None = cfg.pruning.token_pruning_enabled
+    pipeline_depth: int = 1   # StepPipeline depth: 1 = synchronous,
+    # 2 = double-buffered (host plans/stages step N+1 while the device
+    # executes step N; results bit-exact at any depth)
 
     def __post_init__(self):
         if self.max_batch <= 0:
             raise ValueError(f"VisionEngineConfig.max_batch must be a "
                              f"positive slot count, got {self.max_batch}")
+        if self.pipeline_depth <= 0:
+            raise ValueError(f"VisionEngineConfig.pipeline_depth must be "
+                             f">= 1, got {self.pipeline_depth}")
         if self.token_tile <= 0:
             raise ValueError(f"VisionEngineConfig.token_tile must be "
                              f"positive, got {self.token_tile}")
@@ -130,8 +137,12 @@ class VisionEngine:
                              f"got {cfg.family!r}")
         self.cfg = cfg
         self.vc = vc if vc is not None else VisionEngineConfig()
+        # the engine stages a fresh padded batch per tile and never
+        # re-reads a dispatched one, so layers tiles can donate their
+        # input buffers to the output allocation
         self.segments = PR.PackedVitSegments(cfg, params, packed,
-                                             use_tdm=self.vc.use_tdm)
+                                             use_tdm=self.vc.use_tdm,
+                                             donate_activations=True)
         self.scheduler = Scheduler(self.vc.max_batch, policy=policy)
         self.batcher = RaggedBatcher(token_tile=self.vc.token_tile,
                                      mode=self.vc.mode,
@@ -145,6 +156,14 @@ class VisionEngine:
         # arrival_step is relative to the serve() call that submitted it,
         # so identical request streams replay identically (warmup == run)
         self._pending: List[Any] = []
+        self.pipeline = StepPipeline(self.vc.pipeline_depth)
+        # speculative next-step plan from plan_ahead: (population
+        # fingerprint it is valid for, plan). Consumed on fingerprint
+        # match; dropped (and replanned) when admissions/retirements made
+        # the prediction stale.
+        self._plan_cache: Optional[Any] = None
+        self.plan_ahead_hits = 0
+        self.plan_ahead_drops = 0
         self.steps = 0
         self.images_served = 0
         self._n_patches_max = (cfg.image_size // cfg.patch_size) ** 2
@@ -197,16 +216,37 @@ class VisionEngine:
                                         / max(solo_ms, 1e-9))
             self._pending.append((base + r.arrival_step, r))
         self._pending.sort(key=lambda ar: ar[0])
+        self._plan_cache = None  # stale speculation from a previous serve
         out: Dict[int, np.ndarray] = {}
         while self._pending or self.scheduler.has_work():
+            # retire bookkeeping for the step in flight: trajectories are
+            # deterministic, so which slots finished is host-known before
+            # their logits materialize (the pipeline completion fills out)
+            self._retire_finished()
             self._admit_arrivals()
-            self.scheduler.schedule()
-            self._sync_admissions()
-            if not self._live:
-                # nothing admitted yet (future arrivals): advance time
-                self.steps += 1
+            staged = None
+            while True:
+                # requests submitted after staging began belong in THIS
+                # plan: drop the staged step (rolls back, leaks nothing)
+                # and replan with the admissions included
+                sub_mark = self.scheduler.submitted_total
+                self.scheduler.schedule()
+                self._sync_admissions()
+                if not self._live:
+                    break
+                staged = self._stage_step(out)
+                if self.scheduler.submitted_total == sub_mark:
+                    break
+                self.pipeline.drop(staged)
+                staged = None
+            if staged is None:
+                if self._pending or self.scheduler.has_work():
+                    # nothing admitted yet (future arrivals): advance time
+                    self.steps += 1
                 continue
-            self.step(out)
+            self.pipeline.submit(staged)
+        self.pipeline.flush()
+        self._retire_finished()
         return out
 
     def stats(self) -> Dict[str, Any]:
@@ -222,6 +262,9 @@ class VisionEngine:
             "trajectory_count": trajectories,
             # the recompile bound: jit_compile_count <= compile_budget
             "compile_budget": buckets + trajectories,
+            "plan_ahead_hits": self.plan_ahead_hits,
+            "plan_ahead_drops": self.plan_ahead_drops,
+            **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
             **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
             **{f"plan_{k}": v for k, v in self.planner.stats().items()},
         }
@@ -313,84 +356,156 @@ class VisionEngine:
         return None
 
     def step(self, out: Dict[int, np.ndarray]) -> None:
-        """Advance the in-flight population: ask the planner for an
-        ``ExecutionPlan`` over the ragged population, run its fused express
-        lanes (whole remaining trajectories, one dispatch each) and tiles
-        (one segment each, planner-ordered so deadline-urgent tiles go
-        first), scatter results, retire finished images (freeing their
-        slots for the next admissions)."""
+        """Synchronously advance the in-flight population one step
+        (compat wrapper: stage + dispatch + complete + retire in one
+        call). The serve loop goes through the pipeline instead, where
+        stage/dispatch/complete are allowed to overlap across steps."""
+        self.pipeline.submit(self._stage_step(out))
+        self.pipeline.flush()
+        self._retire_finished()
+
+    def _next_plan(self, items: List[PlanItem]):
+        """This step's ExecutionPlan, via the plan-ahead cache when the
+        population matches the prediction (the common case between
+        admissions at depth >= 2): plans are deterministic values of the
+        item population, so the speculative plan IS the plan a fresh
+        ``plan_ahead(items, 1)[0]`` would build — bit-identical behavior,
+        planning cost hidden behind the previous step's device work."""
+        key = self._items_fingerprint(items)
+        cached, self._plan_cache = self._plan_cache, None
+        if cached is not None:
+            ckey, cplan = cached
+            if key is not None and ckey == key:
+                self.plan_ahead_hits += 1
+                return cplan
+            self.plan_ahead_drops += 1
+        plans = self.planner.plan_ahead(items, self.pipeline.depth)
+        if len(plans) > 1 and key is not None:
+            nxt = self.planner.advance_items(items, plans[0])
+            if nxt:
+                self._plan_cache = (self._items_fingerprint(nxt), plans[1])
+        return plans[0]
+
+    @staticmethod
+    def _items_fingerprint(items: List[PlanItem]):
+        """Population identity the plan cache keys on; ``None`` (never
+        cache) when any item carries a deadline — urgency depends on the
+        wall clock, so deadline plans must be rebuilt at dispatch time."""
+        if any(it.deadline_left_ms is not None for it in items):
+            return None
+        return tuple((it.stage, it.n_tokens, it.cap, it.trajectory)
+                     for it in items)
+
+    def _stage_step(self, out: Dict[int, np.ndarray]) -> StagedStep:
+        """Stage one engine step: plan the population, build every tile's
+        padded input batch and every lane's entry activation, and close
+        over them in a :class:`StagedStep`. Staging mutates NO engine
+        state (plans fold into the ledgers only at dispatch, via
+        ``planner.commit``) — a staged step can be dropped for a replan
+        and leaks nothing.
+
+        Exactness: padding and stacking are pure data movement, so the
+        staged buffers are bitwise the batches the synchronous path
+        built host-side; the same jitted segment bodies then make the
+        logits independent of pipeline depth."""
         slots = sorted(self._live)
         now = time.monotonic()
         items = [self._plan_item(self._live[s], now) for s in slots]
-        plan = self.planner.plan(items)
-        # urgent tiles (the plan's leading tiles) dispatch BEFORE lanes: a
-        # fused lane is the most expensive single dispatch of the step and
-        # must not sit on a deadline-urgent request's critical path
+        plan = self._next_plan(items)
         n_urgent = plan.urgent_tile_count()
-        for tile in plan.tiles[:n_urgent]:
-            self._run_tile(tile, [slots[i] for i in tile.members])
+        n_segs = len(self.segments.plan)
+
+        tile_runs = []
+        for tile in plan.tiles:
+            member_slots = [slots[i] for i in tile.members]
+            states = [self._live[s] for s in member_slots]
+            seg = self.segments.plan[states[0].seg_idx]
+            k = self._stage_key(states[0])[2]
+            # token/batch padding is exactness-neutral; building the batch
+            # from device handles (pad + stack) keeps staging async — the
+            # old host-side scatter would block on the previous step
+            feat = states[0].x.shape[-1]
+            rows = [jnp.pad(jnp.asarray(st.x, jnp.float32),
+                            ((0, tile.n_tile - st.n_tokens), (0, 0)))
+                    for st in states]
+            if tile.b_tile > len(states):
+                zero = jnp.zeros((tile.n_tile, feat), jnp.float32)
+                rows += [zero] * (tile.b_tile - len(states))
+            batch = jnp.stack(rows)
+            n_valid = None
+            if tile.needs_mask and seg[0] in ("layers", "tdm"):
+                n_valid = np.fromiter(
+                    (st.n_tokens for st in states), np.int32, len(states))
+                n_valid = np.concatenate(
+                    [n_valid, np.full(tile.b_tile - len(states), tile.n_tile,
+                                      np.int32)])
+            tile_runs.append((tile, member_slots, seg, k, batch, n_valid))
+
+        lane_runs = []
         for lane in plan.lanes:
-            self._run_lane(lane, slots[lane.member])
-        for tile in plan.tiles[n_urgent:]:
-            self._run_tile(tile, [slots[i] for i in tile.members])
-        self.steps += 1
-        self._retire(out)
+            slot = slots[lane.member]
+            st = self._live[slot]
+            steps = tuple((stage[1], stage[2])
+                          for stage, _ in lane.trajectory)
+            lane_runs.append((slot, steps, jnp.asarray(st.x,
+                                                       jnp.float32)[None]))
 
-    def _run_lane(self, lane, slot: int) -> None:
-        """Run one express lane: the request's whole remaining trajectory
-        as a single fused program (engine trajectories always end at the
-        head, so the result is the logits)."""
-        st = self._live[slot]
-        steps = tuple((stage[1], stage[2]) for stage, _ in lane.trajectory)
-        y = self.segments.run_fused(steps, st.x[None])
-        st.req.logits = np.asarray(y)[0]
-        st.seg_idx = len(self.segments.plan)
+        produced: List[Any] = []  # (req, y handle, row) head/lane outputs
 
-    def _run_tile(self, tile, member_slots: List[int]) -> None:
-        states = [self._live[s] for s in member_slots]
-        seg = self.segments.plan[states[0].seg_idx]
-        kind = seg[0]
-        k = self._stage_key(states[0])[2]
+        def run_tile(tr):
+            tile, member_slots, seg, k, batch, n_valid = tr
+            y = self.segments.run(seg, batch, n_valid=n_valid, k=k)
+            kind = seg[0]
+            for b, slot in enumerate(member_slots):
+                st = self._live[slot]
+                if kind == "embed":
+                    st.n_tokens += 1          # + CLS
+                    st.x = y[b, : st.n_tokens]
+                elif kind == "layers":
+                    st.x = y[b, : st.n_tokens]
+                elif kind == "tdm":
+                    st.n_tokens = k + 2       # CLS + k kept + fused
+                    st.x = y[b, : st.n_tokens]
+                else:  # head
+                    produced.append((st.req, y, b))
+                st.seg_idx += 1
+            return y
 
-        # stage the tile on the host: token/batch padding and the member
-        # scatter are pure data movement (no FP ops — exactness-neutral),
-        # and one host->device transfer per tile beats per-member pad/stack
-        # dispatches
-        feat = states[0].x.shape[-1]
-        batch = np.zeros((tile.b_tile, tile.n_tile, feat), np.float32)
-        for b, st in enumerate(states):
-            batch[b, : st.n_tokens] = st.x
+        def dispatch():
+            # urgent tiles (the plan's leading tiles) dispatch BEFORE
+            # lanes: a fused lane is the most expensive single dispatch of
+            # the step and must not sit on a deadline-urgent request's
+            # critical path
+            handles = [run_tile(tr) for tr in tile_runs[:n_urgent]]
+            for slot, steps, x1 in lane_runs:
+                st = self._live[slot]
+                y = self.segments.run_fused(steps, x1)
+                produced.append((st.req, y, 0))
+                st.seg_idx = n_segs
+                handles.append(y)
+            handles += [run_tile(tr) for tr in tile_runs[n_urgent:]]
+            self.planner.commit(plan)
+            self.steps += 1
+            return handles
 
-        n_valid = None
-        if tile.needs_mask and kind in ("layers", "tdm"):
-            n_valid = np.fromiter(
-                (st.n_tokens for st in states), np.int32, len(states))
-            n_valid = np.concatenate(
-                [n_valid, np.full(tile.b_tile - len(states), tile.n_tile,
-                                  np.int32)])
-        y = np.asarray(self.segments.run(seg, jnp.asarray(batch),
-                                         n_valid=n_valid, k=k))
+        def complete(handles):
+            for req, y, row in produced:
+                req.logits = np.asarray(y[row])
+                req.done = True
+                out[req.uid] = req.logits
 
-        for b, st in enumerate(states):
-            if kind == "embed":
-                st.n_tokens += 1          # + CLS
-                st.x = y[b, : st.n_tokens]
-            elif kind == "layers":
-                st.x = y[b, : st.n_tokens]
-            elif kind == "tdm":
-                st.n_tokens = k + 2       # CLS + k kept + fused
-                st.x = y[b, : st.n_tokens]
-            else:  # head
-                st.req.logits = y[b]
-            st.seg_idx += 1
+        return StagedStep(dispatch=dispatch, complete=complete,
+                          label=f"vit-step-{self.steps}")
 
-    def _retire(self, out: Dict[int, np.ndarray]) -> None:
+    def _retire_finished(self) -> None:
+        """Free slots whose trajectory completed. Host-deterministic given
+        the dispatched plans, so it runs at the NEXT step's build even
+        while the finishing step is still on the device; the logits
+        materialize in that step's pipeline completion."""
         n_segs = len(self.segments.plan)
         for slot in sorted(self._live):
             st = self._live[slot]
             if st.seg_idx >= n_segs:
-                st.req.done = True
-                out[st.req.uid] = st.req.logits
                 self.scheduler.retire(slot)
                 del self._live[slot]
                 self.images_served += 1
