@@ -32,8 +32,15 @@ count, deadline dispatches, modeled saving).
     PYTHONPATH=src python benchmarks/vision_bench.py --smoke        # CI lane
     PYTHONPATH=src python benchmarks/vision_bench.py --smoke --planner off
 
-Every timed arm runs at ``--pipeline-depth`` (1 = synchronous), and a
-cross-depth comparison block always serves the planned mixed arm at depths
+Every timed arm runs at ``--pipeline-depth`` (1 = synchronous) and under
+``--quality`` / ``--keep-floor`` (the QualityController: ``strict`` = off,
+the bit-exact control CI also runs; ``degrade``/``auto`` enable keep-rate
+tightening). A quality Pareto block always sweeps the ``degrade`` floor
+over the keep-level grid on a uniform-rate stream and asserts the
+elasticity property: modeled latency strictly decreases as the floor
+tightens, recompiles stay within the bucket ∪ trajectory budget, and a
+top-1 agreement column proxies the accuracy cost. A cross-depth
+comparison block always serves the planned mixed arm at depths
 1 and 2: outputs must be bit-identical (sha256 ``outputs_digest`` — the CI
 fast lane also compares digests between whole ``--pipeline-depth 1`` and
 ``2`` artifacts), and the ``wall_vs_device`` / ``device_idle_s`` columns
@@ -122,13 +129,15 @@ def outputs_digest(out) -> str:
 
 
 def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
-             bmode: str, planner: str, pipeline_depth: int = 1):
+             bmode: str, planner: str, pipeline_depth: int = 1,
+             quality: str = "strict", keep_floor: float = 0.4):
     """Serve the stream twice (warmup compiles every shape on the identical
     stream — arrival dynamics replay exactly) and time the second pass."""
     from repro.serving import VisionEngine, VisionEngineConfig
 
     vc = VisionEngineConfig(max_batch=slots, mode=bmode, token_tile=1,
-                            planner=planner, pipeline_depth=pipeline_depth)
+                            planner=planner, pipeline_depth=pipeline_depth,
+                            quality=quality, keep_floor=keep_floor)
     engine = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model)
     engine.serve(reqs_factory())
     warm = engine.stats()
@@ -169,6 +178,84 @@ def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
         "modeled_saving_ms": st["plan_modeled_saving_ms"],
         "calibrated": st["plan_calibrated"],
     }
+
+
+def quality_pareto(cfg, masked, packed, cost_model, reqs_factory, *,
+                   slots: int, planner: str):
+    """The quality-elasticity Pareto sweep: serve the identical stream at
+    progressively tighter keep floors (``degrade`` mode pins every
+    consenting request to the lowest usable grid level, so each arm IS one
+    floor) and report modeled latency vs a top-1 agreement accuracy proxy
+    against the ``strict`` (controller off) arm.
+
+    ``modeled_ms`` is a deterministic end-to-end price of the stream under
+    each arm's resolved schedules — the Pareto x-axis the acceptance
+    criterion asserts on (strictly decreasing as the floor tightens),
+    immune to shared-CI wall-clock noise. It is priced at token
+    resolution (the cost model's attention-shaped proxy, quadratic +
+    linear in the token count); the paper's accelerator tile model
+    (``modeled_tile_ms``, also reported) quantizes token counts to tile
+    boundaries, which ties neighboring keep counts at smoke scale and
+    would hide real load reductions. Recompiles must stay within the
+    bucket ∪ trajectory budget in every arm: the controller only resolves
+    onto the quantized grid."""
+    import numpy as np
+
+    from repro.serving import TileCostModel, VisionEngine, VisionEngineConfig
+
+    # cfg=None -> every stage priced by the token-resolution proxy; same
+    # overhead/scale as the (possibly calibrated) tile model
+    proxy_cm = TileCostModel(
+        None, dispatch_overhead_cycles=cost_model.dispatch_overhead_cycles,
+        seconds_per_cycle=cost_model.seconds_per_cycle)
+    levels = (1.0, 0.8, 0.65, 0.5, 0.35)
+    arms = [("strict", "strict", 0.35)] + [
+        (f"floor={f}", "degrade", f) for f in (0.65, 0.5, 0.35)]
+    rows = []
+    base_top1 = None
+    for name, qmode, floor in arms:
+        vc = VisionEngineConfig(max_batch=slots, mode="balanced",
+                                token_tile=1, planner=planner,
+                                quality=qmode, keep_levels=levels,
+                                keep_floor=floor)
+        eng = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model)
+        eng.serve(reqs_factory())  # warmup compiles the arm's shapes
+        reqs = reqs_factory()
+        t0 = time.time()
+        out = eng.serve(reqs)
+        dt = time.time() - t0
+        st = eng.stats()
+        # price the whole stream under this arm's resolved schedules
+        # (degrade resolution is pressure-independent, so the host-side
+        # replay here matches what the engine dispatched)
+        q = eng.planner.quality
+        modeled = tile_modeled = 0.0
+        for r in reqs:
+            eff = q.resolve(eng._base_schedule(r), preference=r.quality)
+            traj = eng._traj_from(0, r.n_patches, eff, r.soft_prune)
+            modeled += proxy_cm.ms(proxy_cm.trajectory_cycles(traj))
+            tile_modeled += cost_model.ms(
+                cost_model.trajectory_cycles(traj))
+        top1 = {u: int(np.argmax(lg)) for u, lg in out.items()}
+        if base_top1 is None:
+            base_top1 = top1
+        rows.append({
+            "arm": name, "quality": qmode, "keep_floor": floor,
+            "keep_levels": list(levels),
+            "modeled_ms": modeled,
+            "modeled_tile_ms": tile_modeled,
+            "seconds": dt, "images_s": len(out) / dt,
+            "top1_agreement": (sum(top1[u] == base_top1[u] for u in top1)
+                               / max(len(top1), 1)),
+            "served": len(out), "expected": len(reqs),
+            "tightened_steps": st["quality_tightened"],
+            "levels_used": list(st["quality_levels_used"]),
+            "jit_compiles": st["jit_compile_count"],
+            "compile_budget": st["compile_budget"],
+            "recompile_bound_ok":
+                st["jit_compile_count"] <= st["compile_budget"],
+        })
+    return rows
 
 
 def pipeline_compare(cfg, masked, packed, cost_model, reqs_factory, *,
@@ -224,7 +311,8 @@ def pipeline_compare(cfg, masked, packed, cost_model, reqs_factory, *,
 
 def bench(arch: str, num: int, slots: int, arrival_spread: int,
           image_size: int, d_model: int, seed: int, planner: str,
-          calibrate: bool, pipeline_depth: int = 1):
+          calibrate: bool, pipeline_depth: int = 1,
+          quality: str = "strict", keep_floor: float = 0.4):
     import jax
 
     from repro.configs import get_config
@@ -254,6 +342,12 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
     mixed = lambda: make_requests(cfg, num, arrival_spread, seed)
     sparse = lambda: make_requests(cfg, num, max(2 * num, arrival_spread),
                                    seed + 1, unique_sizes=True)
+    # the Pareto stream runs every request at the config keep rate so each
+    # sweep floor below it actually tightens (mixed per-request rates would
+    # leave sub-floor requests untouched and flatten the curve)
+    from repro.launch.serve_vision import make_requests as _mk
+    pareto = lambda: _mk(cfg, num, arrival_spread, seed + 2, r_ts=[None],
+                         size_weights=[0.5, 0.3, 0.2])
     results = {"mixed": {}, "sparse": {}}
     for mode, bmode, pmode in (("naive", "naive", "off"),
                                ("balanced", "balanced", "off"),
@@ -261,14 +355,19 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
         results["mixed"][mode] = run_mode(
             cfg, masked, packed, cost_model, mixed,
             slots=slots, bmode=bmode, planner=pmode,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            quality=quality, keep_floor=keep_floor)
     for mode, pmode in (("balanced", "off"), ("planned", planner)):
         results["sparse"][mode] = run_mode(
             cfg, masked, packed, cost_model, sparse,
             slots=slots, bmode="balanced", planner=pmode,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            quality=quality, keep_floor=keep_floor)
     results["pipeline"] = pipeline_compare(
         cfg, masked, packed, cost_model, mixed, slots=slots,
+        planner=planner)
+    results["quality_pareto"] = quality_pareto(
+        cfg, masked, packed, cost_model, pareto, slots=slots,
         planner=planner)
     return results, fit
 
@@ -294,6 +393,15 @@ def main():
                          "synchronous; 2 = stage N+1 while the device "
                          "runs N). The cross-depth comparison block "
                          "always runs at both depths regardless.")
+    ap.add_argument("--quality", default="strict",
+                    choices=("strict", "auto", "degrade"),
+                    help="QualityController mode for the timed arms "
+                         "(strict = off, bit-exact control; the Pareto "
+                         "sweep block always runs its own strict + "
+                         "degrade-floor arms regardless)")
+    ap.add_argument("--keep-floor", type=float, default=0.4,
+                    help="controller keep-rate floor for the timed arms "
+                         "(no request is tightened below it)")
     ap.add_argument("--out", default="BENCH_vision.json",
                     help="JSON artifact path")
     ap.add_argument("--smoke", action="store_true",
@@ -307,7 +415,8 @@ def main():
     res, fit = bench(args.arch, args.requests, args.slots,
                      args.arrival_spread, args.image_size, args.d_model,
                      args.seed, args.planner, calibrate=not args.smoke,
-                     pipeline_depth=args.pipeline_depth)
+                     pipeline_depth=args.pipeline_depth,
+                     quality=args.quality, keep_floor=args.keep_floor)
     if fit:
         print(f"cost model calibrated: overhead="
               f"{fit['dispatch_overhead_cycles']:.0f} cycles "
@@ -319,7 +428,7 @@ def main():
            f"{'merges':>6s} {'lanes':>6s} {'save_ms':>8s}")
     print(hdr)
     for scen, modes in res.items():
-        if scen == "pipeline":
+        if scen in ("pipeline", "quality_pareto"):
             continue
         for mode, r in modes.items():
             served = f"{r['served']}/{r['expected']}"
@@ -346,6 +455,26 @@ def main():
           f"{plan_sparse:.2f}x (sparse); sparse saving modeled="
           f"{sparse['planned']['modeled_saving_ms']:.1f}ms measured="
           f"{measured_saving_ms:.1f}ms")
+    pareto = res["quality_pareto"]
+    print(f"{'pareto arm':12s} {'modeled_ms':>10s} {'img/s':>8s} "
+          f"{'top1_agree':>10s} {'tightened':>9s} {'jit<=budget':>11s}")
+    for row in pareto:
+        budget = f"{row['jit_compiles']}<={row['compile_budget']}"
+        print(f"{row['arm']:12s} {row['modeled_ms']:10.4f} "
+              f"{row['images_s']:8.2f} {row['top1_agreement']:10.2f} "
+              f"{row['tightened_steps']:9d} {budget:>11s}")
+        ok &= row["served"] == row["expected"]
+        ok &= row["recompile_bound_ok"]
+    # the quality-elasticity acceptance property: tightening the keep
+    # floor must strictly shrink the modeled latency of the stream, in
+    # smoke and full runs alike (it is a deterministic cost-model fact)
+    pareto_monotone = all(
+        a["modeled_ms"] > b["modeled_ms"]
+        for a, b in zip(pareto, pareto[1:]))
+    print(f"pareto modeled latency strictly decreasing as keep floor "
+          f"tightens: {pareto_monotone}")
+    ok &= pareto_monotone
+
     pipe = res["pipeline"]
     d1, d2 = pipe["depth1"], pipe["depth2"]
     print(f"pipeline (planned, mixed): depth1 wall={d1['wall_s']:.3f}s "
@@ -370,8 +499,9 @@ def main():
                "calibration": fit})
     print(f"wrote {args.out}")
     if not ok:
-        print("FAIL: unserved requests, recompile budget exceeded, or "
-              "pipeline depths disagreed bit-for-bit", file=sys.stderr)
+        print("FAIL: unserved requests, recompile budget exceeded, "
+              "pipeline depths disagreed bit-for-bit, or the quality "
+              "Pareto sweep was not strictly monotone", file=sys.stderr)
         sys.exit(1)
     if not args.smoke:
         if bal_naive <= 1.0:

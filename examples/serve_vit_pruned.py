@@ -14,7 +14,16 @@ Pipeline:
      express lanes for bucket-singleton requests;
   3. verification: every served logit vector is BIT-EXACT against the
      single-request offline path (``forward_vit_packed``), regardless of
-     what else was in flight and of what the planner merged or fused.
+     what else was in flight and of what the planner merged or fused;
+  4. quality elasticity: the same stream re-served through a
+     ``QualityController`` (quality='degrade') with per-request
+     accuracy/latency preferences — consenting requests are tightened
+     onto the controller's quantized keep-level grid (here the 0.55
+     floor), ``quality='strict'`` requests are pinned to their base
+     schedule, and soft-pruning requests fold dropped tokens into a
+     weighted package token instead of discarding them. Every degraded
+     logit is still bit-exact against the offline path run at the
+     schedule the controller resolved.
 
 Run: PYTHONPATH=src python examples/serve_vit_pruned.py
 """
@@ -83,6 +92,50 @@ def main():
               f"top-1 class {int(np.argmax(out[r.uid]))}, "
               f"bit-exact vs offline: {exact}")
         assert exact, "batched serving must not change logits"
+
+    # --- 4. quality-elastic serving ---------------------------------------
+    # The controller maps scheduler pressure + per-request preference to a
+    # per-step keep schedule at plan time. 'degrade' sheds load: every
+    # consenting request drops to the grid floor; a request that asks for
+    # quality='strict' keeps its base schedule; soft_prune=True swaps the
+    # hard top-k drop for the package-token kernel (dropped tokens live on
+    # as one score-weighted summary row).
+    print("\nquality-elastic re-serve (degrade controller, floor 0.55):")
+    qreqs = [VisionRequest(
+        uid=i, patches=r.patches.copy(), r_t=r.r_t,
+        arrival_step=r.arrival_step) for i, r in enumerate(reqs)]
+    qreqs[1].quality = "strict"     # accuracy-critical: opts out
+    qreqs[3].soft_prune = True      # latency-tolerant: package token
+    qeng = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(
+                            max_batch=3, planner="full", quality="degrade",
+                            keep_levels=(1.0, 0.85, 0.7, 0.55),
+                            keep_floor=0.55),
+                        policy="prune_pressure_aware")
+    qout = qeng.serve(qreqs)
+    qst = qeng.stats()
+    print(f"tightened {qst['quality_tightened']}/"
+          f"{qst['quality_decisions']} keep decisions onto grid levels "
+          f"{qst['quality_levels_used']} (jit compiles "
+          f"{qst['jit_compile_count']} <= {qst['compile_budget']})")
+    for r in qreqs:
+        # the reference schedule is whatever the controller resolved (the
+        # resolution is pure, so we can replay it: strict preference pins
+        # the base schedule; everyone else tightens down the grid — a
+        # base rate already below the floor level is left untouched)
+        base = PR.keep_schedule(cfg, r_t=r.r_t)
+        sched = qeng.planner.quality.resolve(base, preference=r.quality)
+        ref = PR.forward_vit_packed(cfg, masked, packed, r.patches[None],
+                                    schedule=sched, soft=r.soft_prune,
+                                    segments=qeng.segments)
+        exact = np.array_equal(np.asarray(ref.logits[0]), qout[r.uid])
+        tag = ("strict" if r.quality == "strict"
+               else "soft" if r.soft_prune else "hard")
+        print(f"  uid {r.uid} ({tag:6s}): schedule {sched} -> top-1 "
+              f"{int(np.argmax(qout[r.uid]))}, bit-exact vs offline "
+              f"at the resolved schedule: {exact}")
+        assert exact, "the controller changes WHICH schedule runs, " \
+                      "never the math"
 
 
 if __name__ == "__main__":

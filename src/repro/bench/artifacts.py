@@ -16,6 +16,13 @@ ONE envelope instead of per-script ad-hoc dicts:
 
 Bump ``SCHEMA_VERSION`` when the envelope itself changes shape; kind-local
 result layouts may evolve freely (consumers dispatch on ``kind``).
+
+Version history:
+  1 — initial envelope.
+  2 — vision artifacts grew the ``quality_pareto`` results block (keep-
+      floor sweep rows: modeled_ms, top1_agreement, tightened_steps) and
+      the timed arms record the controller's quality/keep-floor knobs in
+      ``config``.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ import json
 import time
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _RESERVED = ("schema_version", "kind", "created_unix", "config", "results")
 

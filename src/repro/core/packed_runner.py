@@ -33,7 +33,7 @@ zero TDM score, so batching never leaks padding into a request's logits.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -104,20 +104,62 @@ def tdm_keep_count(n_tokens: int, r_t: float) -> int:
     return TP.num_kept_tokens(n_tokens, r_t, has_cls=True) - 2
 
 
+def tdm_soft_keep_count(n_tokens: int, r_t: float, has_pkg: bool) -> int:
+    """Static top-k count for a SOFT TDM at ``n_tokens`` real tokens. Same
+    rule as :func:`tdm_keep_count`, except that once a package row exists
+    (``has_pkg``: every soft TDM after the first) it is pinned — the top-k
+    draws from the ``n_tokens - 2`` real body rows, so ``k`` clamps there
+    (only binds as ``r_t -> 1``; output count ``k + 2`` then never exceeds
+    the input count, unlike the hard TDM's ``+1`` fused-row growth)."""
+    k = tdm_keep_count(n_tokens, r_t)
+    return min(k, n_tokens - 2) if has_pkg else k
+
+
+def keep_schedule(cfg: ModelConfig, r_t: Optional[float] = None,
+                  use_tdm: Optional[bool] = None) -> Tuple[float, ...]:
+    """Uniform per-step keep schedule: ``r_t`` (default ``cfg.pruning.r_t``)
+    broadcast over every TDM segment of ``vit_segments``, in segment order.
+    The serving engine generalizes this — requests may carry a non-uniform
+    schedule, and the QualityController may tighten entries at plan time —
+    but a scalar ``r_t`` is always exactly this broadcast."""
+    if r_t is None:
+        r_t = cfg.pruning.r_t
+    n_tdm = sum(1 for seg in vit_segments(cfg, use_tdm)
+                if seg[0] == "tdm")
+    return (float(r_t),) * n_tdm
+
+
 def token_trajectory(cfg: ModelConfig, n_patches: int,
                      r_t: Optional[float] = None,
-                     use_tdm: Optional[bool] = None) -> Tuple[int, ...]:
+                     use_tdm: Optional[bool] = None,
+                     schedule: Optional[Sequence[float]] = None,
+                     soft: bool = False) -> Tuple[int, ...]:
     """Real token count a single image carries *after* each segment of
     ``vit_segments`` (head repeats the final count). Drives the ragged
-    batcher's bucket keys and the prune-pressure-aware admission policy."""
-    p = cfg.pruning
-    if r_t is None:
-        r_t = p.r_t
+    batcher's bucket keys and the prune-pressure-aware admission policy.
+
+    ``schedule`` gives the keep rate per TDM segment (in segment order);
+    ``None`` broadcasts ``r_t`` over every TDM segment (the classic
+    frozen-scalar behavior, now a special case). ``soft`` prices the
+    soft-pruning variant (``tdm_soft_keep_count``'s package-row clamp)."""
     n = n_patches + 1  # + CLS
     counts = []
+    ordinal = 0
+    if schedule is None:
+        schedule_t: Tuple[float, ...] = keep_schedule(cfg, r_t, use_tdm)
+    else:
+        schedule_t = tuple(float(r) for r in schedule)
     for seg in vit_segments(cfg, use_tdm):
         if seg[0] == "tdm":
-            n = TP.num_kept_tokens(n, r_t, has_cls=True)
+            if ordinal >= len(schedule_t):
+                raise ValueError(
+                    f"keep schedule has {len(schedule_t)} entries but the "
+                    f"segment plan reaches TDM ordinal {ordinal}")
+            r = schedule_t[ordinal]
+            k = (tdm_soft_keep_count(n, r, has_pkg=ordinal > 0) if soft
+                 else tdm_keep_count(n, r))
+            n = k + 2
+            ordinal += 1
         counts.append(n)
     return tuple(counts)
 
@@ -207,6 +249,28 @@ def vit_tdm_layer(cfg: ModelConfig, params: Dict, packed: Dict,
     return _encoder_mlp(cfg, params, x, layer)
 
 
+def vit_tdm_soft_layer(cfg: ModelConfig, params: Dict, packed: Dict,
+                       x: jax.Array, layer: int, k: int,
+                       pkg_mass: Optional[jax.Array] = None,
+                       n_valid: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Soft-pruning variant of :func:`vit_tdm_layer`: the dropped tokens
+    fold into a persistent package token (``TP.tdm_soft``). Same output
+    token count as the hard TDM, plus the accumulated package mass ([B])
+    the NEXT soft TDM needs (``pkg_mass=None`` marks the first TDM, where
+    no package row exists yet). With ``pkg_mass``, each row's package sits
+    at its own valid-token boundary (body index ``n_valid - 2``) so
+    token-padded tiles pin the right row."""
+    x, scores = _encoder_attn(cfg, params, packed, x, layer,
+                              collect_scores=True, n_valid=n_valid)
+    pkg_pos = None
+    if pkg_mass is not None and n_valid is not None:
+        pkg_pos = jnp.asarray(n_valid, jnp.int32) - 2
+    x, mass = TP.tdm_soft(x, scores, has_cls=True, k=k, pkg_mass=pkg_mass,
+                          pkg_pos=pkg_pos)
+    return _encoder_mlp(cfg, params, x, layer), mass
+
+
 def vit_head(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
     """Final norm + CLS readout -> logits [B, num_classes] (fp32)."""
     x = L.layer_norm(x, params["ln_f_s"], params["ln_f_b"], cfg.norm_eps)
@@ -215,16 +279,20 @@ def vit_head(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
 
 
 def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
-                    x: jax.Array, steps: Tuple[Tuple[Segment,
-                                                     Optional[int]], ...]
-                    ) -> jax.Array:
+                    x: jax.Array, steps: Tuple[Tuple, ...],
+                    pkg_mass: Optional[jax.Array] = None) -> jax.Array:
     """Compose consecutive segments into ONE program: ``steps`` is a static
-    tuple of ``(segment, k)`` pairs (``k`` only for TDM segments). This is
-    the express-lane body the planner compiles per trajectory for requests
+    tuple of ``(segment, k)`` pairs — or ``(segment, k, soft)`` triples for
+    soft-pruning TDM steps (``k`` only for TDM segments). This is the
+    express-lane body the planner compiles per trajectory for requests
     that are singletons in every bucket — unbatched and unpadded, so no
     ``n_valid`` is ever needed. All shapes are static given the entry shape
-    and the ``k`` sequence."""
-    for seg, k in steps:
+    and the ``k`` sequence. ``pkg_mass`` seeds the package mass for a lane
+    entered AFTER a soft request's first TDM already ran tiled (``None``
+    otherwise); the mass threads through in-program across soft steps."""
+    for step in steps:
+        seg, k = step[0], step[1]
+        soft = bool(step[2]) if len(step) > 2 else False
         kind = seg[0]
         if kind == "embed":
             x = vit_embed(cfg, params, x)
@@ -233,7 +301,14 @@ def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
         elif kind == "tdm":
             if k is None:
                 raise ValueError("fused tdm steps need an explicit static k")
-            x = vit_tdm_layer(cfg, params, packed, x, seg[1], k=k)
+            if soft:
+                x, pkg_mass = vit_tdm_soft_layer(cfg, params, packed, x,
+                                                 seg[1], k=k,
+                                                 pkg_mass=pkg_mass)
+            else:
+                x = vit_tdm_layer(cfg, params, packed, x, seg[1], k=k)
+                pkg_mass = None  # a hard TDM drops/keeps the package like
+                #                  any token; its mass is meaningless after
         elif kind == "head":
             x = vit_head(cfg, params, x)
         else:
@@ -272,8 +347,9 @@ def forward_vit_packed(cfg: ModelConfig, params: Dict,
                        packed: Dict[str, packing.PackedWeight],
                        patches: jax.Array,
                        use_tdm: bool | None = None,
-                       segments: "Optional[PackedVitSegments]" = None
-                       ) -> M.Output:
+                       segments: "Optional[PackedVitSegments]" = None,
+                       schedule: Optional[Sequence[float]] = None,
+                       soft: bool = False) -> M.Output:
     """ViT forward with attention projections executed via the SBMM kernel
     (interpret mode on CPU; native Pallas on TPU backends).
 
@@ -289,17 +365,32 @@ def forward_vit_packed(cfg: ModelConfig, params: Dict,
     programs are deterministic given the HLO.) Pass ``segments`` to reuse
     an already-compiled executor (e.g. an engine's); otherwise one is
     memoized per (cfg, params, packed, use_tdm) so repeated calls — batch
-    evaluation loops, parity tests — compile once."""
+    evaluation loops, parity tests — compile once.
+
+    ``schedule`` is a per-TDM-segment keep schedule (``None`` broadcasts
+    ``cfg.pruning.r_t``) and ``soft`` selects the package-token soft TDM —
+    together the offline oracle for the serving engine's quality-elastic
+    and soft-pruning paths."""
     runner = segments if segments is not None else _cached_segments(
         cfg, params, packed, use_tdm)
-    r_t = cfg.pruning.r_t
+    if schedule is None:
+        schedule = keep_schedule(cfg, use_tdm=use_tdm)
     x = patches
     n = patches.shape[1] + 1  # + CLS after embed
+    pkg_mass = None
+    ordinal = 0
     for seg in runner.plan:
         if seg[0] == "tdm":
-            k = tdm_keep_count(n, r_t)
-            x = runner.run(seg, x, k=k)
+            r = schedule[ordinal]
+            if soft:
+                k = tdm_soft_keep_count(n, r, has_pkg=ordinal > 0)
+                x, pkg_mass = runner.run(seg, x, k=k, soft=True,
+                                         pkg_mass=pkg_mass)
+            else:
+                k = tdm_keep_count(n, r)
+                x = runner.run(seg, x, k=k)
             n = k + 2
+            ordinal += 1
         elif seg[0] == "head":
             return M.Output(runner.run(seg, x))
         else:
@@ -358,24 +449,35 @@ class PackedVitSegments:
             lambda params, packed, x, n_valid, layer, k: vit_tdm_layer(
                 cfg, params, packed, x, layer, k=k, n_valid=n_valid),
             static_argnames=("layer", "k"))
+        self._tdm_soft = jax.jit(
+            lambda params, packed, x, n_valid, pkg_mass, layer, k:
+            vit_tdm_soft_layer(cfg, params, packed, x, layer, k=k,
+                               pkg_mass=pkg_mass, n_valid=n_valid),
+            static_argnames=("layer", "k"))
         self._head = jax.jit(lambda params, x: vit_head(cfg, params, x))
         self._fused = jax.jit(
-            lambda params, packed, x, steps: run_fused_steps(
-                cfg, params, packed, x, steps),
+            lambda params, packed, x, pkg_mass, steps: run_fused_steps(
+                cfg, params, packed, x, steps, pkg_mass=pkg_mass),
             static_argnames=("steps",))
         self._compiled: set = set()
         self._fused_trajectories: set = set()
 
     def run(self, seg: Segment, x: jax.Array,
             n_valid: Optional[np.ndarray] = None,
-            k: Optional[int] = None) -> jax.Array:
+            k: Optional[int] = None, soft: bool = False,
+            pkg_mass: Optional[jax.Array] = None):
         """Execute one segment on a dense tile ``x``. ``n_valid`` ([B]) is
         required whenever rows are token-padded; ``k`` is required for
         ``tdm`` segments (uniform across the tile by batcher construction).
+        ``soft`` selects the package-token TDM variant: the call takes the
+        tile's accumulated package masses (``None`` before the first TDM)
+        and returns ``(y, new_mass)`` instead of ``y``.
         """
         kind = seg[0]
         nv = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
-        self._compiled.add((seg, tuple(x.shape), nv is not None, k))
+        self._compiled.add((seg, tuple(x.shape), nv is not None, k,
+                            "soft") if soft else
+                           (seg, tuple(x.shape), nv is not None, k))
         if kind == "embed":
             return self._embed(self.params, x)
         if kind == "layers":
@@ -385,28 +487,35 @@ class PackedVitSegments:
             if k is None:
                 raise ValueError("tdm segments need an explicit static k "
                                  "(per-request keep count)")
+            if soft:
+                return self._tdm_soft(self.params, self.packed, x, nv,
+                                      pkg_mass, layer=seg[1], k=k)
             return self._tdm(self.params, self.packed, x, nv,
                              layer=seg[1], k=k)
         if kind == "head":
             return self._head(self.params, x)
         raise ValueError(f"unknown segment {seg!r}")
 
-    def run_fused(self, steps: Tuple[Tuple[Segment, Optional[int]], ...],
-                  x: jax.Array) -> jax.Array:
+    def run_fused(self, steps: Tuple[Tuple, ...], x: jax.Array,
+                  pkg_mass: Optional[jax.Array] = None) -> jax.Array:
         """Express lane: execute ``steps`` — consecutive ``(segment, k)``
-        pairs — as ONE jitted trajectory program (one dispatch for the whole
-        remaining forward of a bucket-singleton request). Compiles once per
-        distinct (steps, entry shape); the per-trajectory ledger is
-        ``fused_trajectory_count`` and its keys bound the extra jit entries
-        beyond the tile bucket set."""
-        steps = tuple((tuple(seg), None if k is None else int(k))
-                      for seg, k in steps)
+        pairs, or ``(segment, k, soft)`` triples for soft TDM steps — as
+        ONE jitted trajectory program (one dispatch for the whole remaining
+        forward of a bucket-singleton request). ``pkg_mass`` ([1]) seeds
+        the package mass when the lane starts after a soft request's first
+        TDM. Compiles once per distinct (steps, entry shape); the
+        per-trajectory ledger is ``fused_trajectory_count`` and its keys
+        bound the extra jit entries beyond the tile bucket set."""
+        steps = tuple(
+            (tuple(s[0]), None if s[1] is None else int(s[1]))
+            + ((True,) if len(s) > 2 and s[2] else ())
+            for s in steps)
         if not steps:
             raise ValueError("fused run needs at least one step")
         self._fused_trajectories.add((steps, tuple(x.shape)))
         self._compiled.add((("fused",) + steps, tuple(x.shape), False, None))
         return self._fused(self.params, self.packed, jnp.asarray(x),
-                           steps=steps)
+                           pkg_mass, steps=steps)
 
     # -- compile observability ---------------------------------------------
     @property
@@ -427,8 +536,8 @@ class PackedVitSegments:
         """Total entries across the jit caches (what XLA actually
         compiled), fused trajectory programs included."""
         total = 0
-        for fn in (self._embed, self._layers, self._tdm, self._head,
-                   self._fused):
+        for fn in (self._embed, self._layers, self._tdm, self._tdm_soft,
+                   self._head, self._fused):
             try:
                 total += fn._cache_size()
             except AttributeError:  # older jax: fall back to the ledger

@@ -95,6 +95,88 @@ def tdm_reference_unbatched(z: jnp.ndarray, scores: jnp.ndarray, r_t: float,
     return out[0]
 
 
+def tdm_soft(z: jax.Array, scores: jax.Array, r_t: float | None = None,
+             has_cls: bool = True, k: int | None = None,
+             pkg_mass: jax.Array | None = None,
+             pkg_pos: jax.Array | None = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Soft-pruning TDM (SPViT-style): dropped tokens fold into ONE
+    persistent "package token" instead of being re-fused from scratch.
+
+    The hard :func:`tdm` synthesizes a fresh fused token at every TDM layer
+    — content dropped at layer 3 is gone by layer 7. Here the package row
+    carries an accumulated score *mass* across layers: at each TDM the
+    previous package re-enters the weighted aggregation with its stored
+    mass as weight,
+
+        package' = (Σ_dropped s_i·z_i + mass·z_pkg) / (Σ s_i + mass),
+        mass'    = Σ_dropped s_i + mass,
+
+    so early-dropped content keeps influence proportional to the attention
+    it once earned, instead of competing by its current (diluted) score.
+    Weights stay RAW (un-normalized) so they share a scale with the carried
+    mass — the exact form the ``token_package`` kernel computes.
+
+    Output length is IDENTICAL to the hard TDM (``1 + k + 1``), which keeps
+    keep-schedule trajectories and serving bucket math variant-agnostic.
+
+    z, scores, ``k``: as in :func:`tdm` (padded rows must score 0 — they
+    then contribute exactly 0 to the package and nothing to its mass).
+    ``pkg_mass`` [B]: accumulated mass when a body row of ``z`` is a
+    package from a previous soft TDM; ``None`` for the first TDM. The
+    package is pinned out of the top-k (it always survives), so ``k`` must
+    leave at least one real body row undropped: ``k <= N_body - 1`` — the
+    derived-from-``r_t`` default clamps itself, explicit ``k`` raises.
+    ``pkg_pos`` [B]: per-row *body* index of the package (default: last
+    body row). The serving engine passes ``n_valid - 2`` so token-padded
+    tiles pin each request's own package, not a padding row.
+
+    Returns ``(z_out [B, k + 2, D], new_mass [B])``.
+    """
+    B, N, D = z.shape
+    n_body = N - 1 if has_cls else N
+    if k is None:
+        k = max(1, math.ceil(n_body * r_t))
+        if pkg_mass is not None:
+            k = min(k, n_body - 1)
+    if pkg_mass is not None and k > n_body - 1:
+        raise ValueError(f"soft TDM with a package row keeps the package "
+                         f"plus k={k} of {n_body - 1} real body tokens — "
+                         f"k must be <= {n_body - 1}")
+
+    body = z[:, 1:, :] if has_cls else z
+    s_body = scores[:, 1:] if has_cls else scores
+
+    is_pkg = None
+    if pkg_mass is not None:
+        if pkg_pos is None:
+            pkg_pos = jnp.full((B,), n_body - 1, jnp.int32)
+        is_pkg = (jnp.arange(n_body)[None, :]
+                  == jnp.asarray(pkg_pos, jnp.int32)[:, None])  # [B, n_body]
+        sel = jnp.where(is_pkg, -jnp.inf, s_body)  # pin pkg out of top-k
+    else:
+        sel = s_body
+
+    _, top_idx = jax.lax.top_k(sel, k)  # [B, k]
+    kept = jnp.take_along_axis(body, top_idx[..., None], axis=1)  # [B,k,D]
+
+    keep_mask = jnp.zeros((B, n_body), dtype=bool)
+    keep_mask = jnp.put_along_axis(keep_mask, top_idx, True, axis=1,
+                                   inplace=False)
+    w = jnp.where(keep_mask, 0.0, s_body.astype(jnp.float32))
+    if is_pkg is not None:
+        w = jnp.where(is_pkg, pkg_mass.astype(jnp.float32)[:, None], w)
+    denom = w.sum(axis=1, keepdims=True) + 1e-9
+    package = jnp.einsum("bn,bnd->bd", w, body.astype(jnp.float32)) / denom
+    new_mass = w.sum(axis=1)
+
+    parts = []
+    if has_cls:
+        parts.append(z[:, :1, :])
+    parts += [kept, package.astype(z.dtype)[:, None, :]]
+    return jnp.concatenate(parts, axis=1), new_mass
+
+
 # ---------------------------------------------------------------------------
 # Beyond-paper: dynamic KV-cache pruning for decode (SpAtten-style adaptation
 # of the paper's token scoring to autoregressive serving).

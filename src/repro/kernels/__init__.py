@@ -2,6 +2,9 @@
 
   sbmm            — the paper's Sparse Block-wise Matrix Multiplication
   token_drop      — fused TDM gather + weighted-fuse (TDHM analog)
+  token_package   — soft-pruning TDM: weighted scatter-reduce into a
+                    persistent package token (SPViT-style), raw weights
+                    normalized in-kernel
   flash_attention — online-softmax attention (prefill/training)
 
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd

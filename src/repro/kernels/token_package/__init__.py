@@ -1,0 +1,5 @@
+from repro.kernels.token_package.ops import token_package
+from repro.kernels.token_package.ref import token_package_ref
+from repro.kernels.token_package.token_package import token_package_pallas
+
+__all__ = ["token_package", "token_package_ref", "token_package_pallas"]

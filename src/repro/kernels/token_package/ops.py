@@ -1,0 +1,85 @@
+"""Jit'd wrapper for the token-package kernel: the full soft-pruning TDM
+step — top-k selection with the package row pinned, raw drop weights plus
+the carried mass, then the fused gather + normalized scatter-reduce kernel.
+Batched via vmap. Mirrors ``core.token_pruning.tdm_soft``'s selection math
+exactly so the two agree wherever the kernel matmul matches the einsum."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.token_package.token_package import token_package_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "has_cls", "has_pkg",
+                                             "td", "interpret"))
+def _token_package_jit(z: jax.Array, scores: jax.Array,
+                       pkg_mass: Optional[jax.Array], k: int, has_cls: bool,
+                       has_pkg: bool, td: int, interpret: bool
+                       ) -> Tuple[jax.Array, jax.Array]:
+    B, N, D = z.shape
+    n_body = N - 1 if has_cls else N
+
+    body = z[:, 1:] if has_cls else z
+    s_body = scores[:, 1:] if has_cls else scores
+
+    if has_pkg:
+        # pin the package (last body row) out of the top-k
+        is_pkg = jnp.arange(n_body)[None, :] == n_body - 1
+        sel = jnp.where(is_pkg, -jnp.inf, s_body)
+    else:
+        sel = s_body
+    _, keep_idx = jax.lax.top_k(sel, k)  # [B, k]
+    keep_mask = jnp.zeros((B, n_body), bool)
+    keep_mask = jnp.put_along_axis(keep_mask, keep_idx, True, axis=1,
+                                   inplace=False)
+    w = jnp.where(keep_mask, 0.0, s_body.astype(jnp.float32))
+    if has_pkg:
+        w = jnp.where(is_pkg, pkg_mass.astype(jnp.float32)[:, None], w)
+    new_mass = w.sum(axis=1)
+
+    d_pad = (-D) % td
+    if d_pad:
+        body = jnp.pad(body, ((0, 0), (0, 0), (0, d_pad)))
+
+    run = functools.partial(token_package_pallas, td=td, interpret=interpret)
+    out = jax.vmap(run)(body, keep_idx.astype(jnp.int32), w)
+    out = out[..., :D]
+    if has_cls:
+        out = jnp.concatenate([z[:, :1], out], axis=1)
+    return out, new_mass
+
+
+def token_package(z: jax.Array, scores: jax.Array,
+                  r_t: "float | None" = None, has_cls: bool = True,
+                  k: "int | None" = None,
+                  pkg_mass: Optional[jax.Array] = None, td: int = 128,
+                  interpret: "bool | None" = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Batched soft-pruning TDM via the Pallas kernel.
+
+    z: [B, N, D]; scores: [B, N]; ``pkg_mass`` [B] is the accumulated
+    package mass when the last body row is a package from a previous soft
+    TDM (``None`` for the first). Returns ``(out [B, N_kept, D], new_mass
+    [B])`` with N_kept = (1 if cls) + k + 1 (package). Same ``k`` clamp
+    rule as ``tdm_soft``: with a package present, ``k <= N_body - 1``.
+    ``interpret=None`` auto-detects the backend (kernels.backend;
+    ``REPRO_KERNEL_INTERPRET`` overrides) — resolved outside the jit so
+    the choice is a static argument."""
+    n_body = z.shape[1] - 1 if has_cls else z.shape[1]
+    if k is None:
+        k = max(1, math.ceil(n_body * r_t))
+        if pkg_mass is not None:
+            k = min(k, n_body - 1)
+    if pkg_mass is not None and k > n_body - 1:
+        raise ValueError(f"token_package with a package row keeps the "
+                         f"package plus k={k} of {n_body - 1} real body "
+                         f"tokens — k must be <= {n_body - 1}")
+    return _token_package_jit(z, scores, pkg_mass, k, has_cls,
+                              pkg_mass is not None, td,
+                              resolve_interpret(interpret))

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the token-package kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def token_package_ref(z: jnp.ndarray, keep_idx: jnp.ndarray,
+                      weights: jnp.ndarray) -> jnp.ndarray:
+    """z: [N, D]; keep_idx: [k]; weights: [N] RAW (un-normalized; zero at
+    kept rows). -> [k+1, D]: kept rows then
+    ``(weights · z) / (Σ weights + 1e-9)``."""
+    kept = z[keep_idx]
+    w = weights.astype(jnp.float32)
+    acc = w[None, :] @ z.astype(jnp.float32)
+    package = (acc / (jnp.sum(w) + 1e-9)).astype(z.dtype)
+    return jnp.concatenate([kept, package], axis=0)

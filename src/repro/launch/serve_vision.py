@@ -14,7 +14,10 @@ merging, ``fuse`` = express-lane trajectory fusion, ``full`` = both);
 deadline-aware tiling is active in every non-``off`` planner mode.
 ``--mode naive`` A/Bs the classic padded batch against the
 load-balanced bucketing; ``--policy`` selects the admission policy shared
-with the LM path (fifo / shortest_prompt_first / prune_pressure_aware).
+with the LM path (fifo / shortest_prompt_first / prune_pressure_aware);
+``--quality`` / ``--keep-floor`` turn on the QualityController (graceful
+quality degradation: keep rates tighten down a quantized grid under
+queue/deadline pressure — ``strict``, the default, is bit-exact off).
 """
 from __future__ import annotations
 
@@ -87,7 +90,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
           policy: str = "fifo", image_size: int = 0,
           arrival_spread: int = 4, seed: int = 0,
           planner: str = "full", deadline_ms: float = 0.0,
-          pipeline_depth: int = 1):
+          pipeline_depth: int = 1, quality: str = "strict",
+          keep_floor: float = 0.4):
     cfg = get_config(arch).reduced()
     if image_size:
         cfg = cfg.replace(image_size=image_size)
@@ -98,7 +102,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
         planner = "off"  # naive padding has no buckets to plan over
     vc = VisionEngineConfig(max_batch=slots, mode=mode,
                             token_tile=token_tile, planner=planner,
-                            pipeline_depth=pipeline_depth)
+                            pipeline_depth=pipeline_depth,
+                            quality=quality, keep_floor=keep_floor)
     engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
                                       policy=policy)
     reqs = make_requests(cfg, num_requests, arrival_spread, seed,
@@ -140,13 +145,24 @@ def main():
                     help="StepPipeline depth: 1 = synchronous stepping "
                          "(the reference path), 2 = stage/plan step N+1 "
                          "while the device executes step N (bit-exact)")
+    ap.add_argument("--quality", default="strict",
+                    choices=("strict", "auto", "degrade"),
+                    help="QualityController mode: strict = off (bit-exact "
+                         "with the fixed-keep-rate path), auto = tighten "
+                         "keep rates with queue/deadline pressure, "
+                         "degrade = shed-load floor for every consenting "
+                         "request")
+    ap.add_argument("--keep-floor", type=float, default=0.4,
+                    help="controller keep-rate floor: no request is ever "
+                         "tightened below this, whatever the load")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.slots, args.mode,
                 args.token_tile, args.policy, args.image_size,
                 args.arrival_spread, args.seed, args.planner,
-                args.deadline_ms, args.pipeline_depth)
+                args.deadline_ms, args.pipeline_depth, args.quality,
+                args.keep_floor)
     if args.json:
         print(json.dumps({
             "top1": {str(u): int(np.argmax(lg))
@@ -164,6 +180,13 @@ def main():
               f"jit_compiles={st['jit_compile_count']} <= "
               f"buckets+trajectories={st['compile_budget']}")
         print(plan_stats_line(st))
+        if st["quality_mode"] != "strict":
+            print(f"quality={st['quality_mode']} "
+                  f"floor={st['quality_keep_floor']} tightened="
+                  f"{st['quality_tightened']}/{st['quality_decisions']} "
+                  f"steps (deadline-driven: "
+                  f"{st['quality_deadline_tightened']}) levels_used="
+                  f"{st['quality_levels_used']}")
         for uid, logits in sorted(out["outputs"].items()):
             print(f"  uid {uid}: top-1 class {int(np.argmax(logits))}")
 

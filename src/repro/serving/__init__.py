@@ -6,8 +6,10 @@ cache state) / ``ModelRunner`` (jitted steps + compile cache) compose into
 
 Vision path: the same ``Scheduler`` + ``TilePlanner`` (cost-model-driven
 execution planning over the ``RaggedBatcher``'s token-count buckets:
-bucket merging, express-lane fusion, deadline-aware tiling) +
-``core.packed_runner.PackedVitSegments`` compose into ``VisionEngine`` —
+bucket merging, express-lane fusion, deadline-aware tiling; owns the
+``QualityController`` that resolves per-request keep schedules under
+load) + ``core.packed_runner.PackedVitSegments`` compose into
+``VisionEngine`` —
 continuous-batching inference for the packed, simultaneously-pruned ViT.
 
 Both engines drive their step loops through the ``StepPipeline``
@@ -25,6 +27,8 @@ from repro.serving.pipeline import StagedStep, StepPipeline
 from repro.serving.planner import (PLANNER_MODES, ExecutionPlan, FusedLane,
                                    PlanItem, PlanStats, TileCostModel,
                                    TilePlanner)
+from repro.serving.quality import (QUALITY_MODES, QualityConfig,
+                                   QualityController)
 from repro.serving.ragged_batcher import RaggedBatcher, Tile
 from repro.serving.runner import ModelRunner, build_padded_batch
 from repro.serving.scheduler import Scheduler
@@ -38,4 +42,5 @@ __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
            "VisionEngine", "VisionEngineConfig", "VisionRequest",
            "RaggedBatcher", "Tile",
            "TilePlanner", "TileCostModel", "ExecutionPlan", "PlanItem",
-           "FusedLane", "PlanStats", "PLANNER_MODES"]
+           "FusedLane", "PlanStats", "PLANNER_MODES",
+           "QualityController", "QualityConfig", "QUALITY_MODES"]

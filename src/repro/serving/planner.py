@@ -205,8 +205,10 @@ class TileCostModel:
     @staticmethod
     def _segment_of(stage) -> Optional[Tuple]:
         """Extract the packed_runner segment from an engine stage key
-        ``(seg_idx, segment, k)``; None for opaque keys."""
-        if (isinstance(stage, tuple) and len(stage) == 3
+        ``(seg_idx, segment, k)`` — or the soft-pruning variant
+        ``(seg_idx, segment, k, "soft")`` (same segment weights, so the
+        same pricing); None for opaque keys."""
+        if (isinstance(stage, tuple) and len(stage) in (3, 4)
                 and isinstance(stage[1], tuple) and stage[1]
                 and isinstance(stage[1][0], str)):
             return stage[1]
@@ -298,7 +300,8 @@ class TilePlanner:
 
     def __init__(self, batcher: RaggedBatcher,
                  cost_model: Optional[TileCostModel] = None,
-                 mode: str = "full", fuse_min_segments: int = 2):
+                 mode: str = "full", fuse_min_segments: int = 2,
+                 quality: Optional[object] = None):
         if mode not in PLANNER_MODES:
             raise ValueError(f"planner mode must be one of {PLANNER_MODES}, "
                              f"got {mode!r}")
@@ -314,6 +317,14 @@ class TilePlanner:
             else TileCostModel()
         self.mode = mode
         self.fuse_min_segments = fuse_min_segments
+        # keep-schedule resolution is a planning decision (it rewrites
+        # trajectories, and trajectories are what plans are built from),
+        # so the QualityController lives here; a strict (off) controller
+        # is the default and resolves every schedule to itself
+        if quality is None:
+            from repro.serving.quality import QualityController
+            quality = QualityController()
+        self.quality = quality
         # cumulative accounting
         self.plans = 0
         self.merges = 0

@@ -39,8 +39,9 @@ continuous-batching scenario.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -50,6 +51,8 @@ from repro.core import packed_runner as PR
 from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
                                    TilePlanner)
 from repro.serving.pipeline import StagedStep, StepPipeline
+from repro.serving.quality import (QUALITY_MODES, QualityConfig,
+                                   QualityController)
 from repro.serving.ragged_batcher import RaggedBatcher
 from repro.serving.scheduler import Scheduler
 
@@ -66,11 +69,26 @@ class VisionRequest:
     # planner carves the request into smaller, first-dispatched tiles when
     # its modeled slack runs out, and the admission annotation below shrinks
     # so prune_pressure_aware admits tight-deadline requests earlier
+    keep_schedule: Optional[Tuple[float, ...]] = None  # explicit per-TDM
+    # keep schedule (one entry per TDM segment, in segment order) —
+    # overrides r_t; None broadcasts r_t over every TDM step
+    quality: Optional[str] = None    # accuracy/latency preference for the
+    # QualityController: "strict" pins the base schedule even under load,
+    # "degrade" invites maximum tightening, None follows the engine mode.
+    # Ignored (bit-exactly) while the engine controller is off.
+    soft_prune: bool = False         # serve with the soft-pruning TDM:
+    # dropped tokens fold into a persistent package token instead of being
+    # re-fused per layer (keeps accuracy honest at aggressive keep rates)
     logits: Optional[np.ndarray] = None
     done: bool = False
     prune_load: Optional[float] = None   # predicted post-prune token load
     # (sum of the per-segment token counts, deadline-discounted; set at
-    # submit — the prune_pressure_aware admission policy reads it)
+    # submit and REFRESHED each admission pass for waiting deadline
+    # requests — the prune_pressure_aware admission policy reads it)
+    prune_load_base: Optional[float] = None  # undiscounted load (engine-set)
+    solo_ms: Optional[float] = None  # modeled solo latency (engine-set)
+    submit_t: Optional[float] = None  # monotonic submit time (engine-set;
+    # waiting time consumes deadline slack in the refresh)
 
     @property
     def n_patches(self) -> int:
@@ -87,6 +105,13 @@ class VisionEngineConfig:
     pipeline_depth: int = 1   # StepPipeline depth: 1 = synchronous,
     # 2 = double-buffered (host plans/stages step N+1 while the device
     # executes step N; results bit-exact at any depth)
+    quality: str = "strict"   # QualityController mode: strict = off
+    # (bit-exact with the pre-controller path), auto = tighten keep rates
+    # with queue/deadline pressure, degrade = shed-load floor
+    keep_levels: Tuple[float, ...] = (1.0, 0.85, 0.7, 0.55, 0.4)
+    # quantized keep-rate grid the controller resolves onto (bounds the
+    # distinct TDM k values, hence recompiles)
+    keep_floor: float = 0.4   # no request is ever tightened below this
 
     def __post_init__(self):
         if self.max_batch <= 0:
@@ -107,6 +132,11 @@ class VisionEngineConfig:
         if self.planner != "off" and self.mode != "balanced":
             raise ValueError(f"planner {self.planner!r} requires "
                              f"mode='balanced' (got {self.mode!r})")
+        # delegate grid/floor/mode validation to the config the controller
+        # is built from (one source of truth for the constraints)
+        self.quality_config = QualityConfig(mode=self.quality,
+                                            keep_levels=self.keep_levels,
+                                            keep_floor=self.keep_floor)
 
 
 @dataclasses.dataclass
@@ -118,7 +148,13 @@ class _Live:
     seg_idx: int
     x: Any               # patches (pre-embed) or [n_tokens, D] activations
     n_tokens: int        # real rows of x (grouping key)
-    r_t: float
+    schedule: Tuple[float, ...]  # BASE per-TDM keep schedule (static per
+    # request; the QualityController resolves the *effective* schedule
+    # from it at every staging pass — already-executed entries are baked
+    # into n_tokens and never revisited)
+    soft: bool = False   # package-token soft TDM for this request
+    pkg_mass: Any = None  # accumulated package mass (0-d device array)
+    # after the first soft TDM; updated at dispatch like x/n_tokens
     admit_t: float = 0.0  # monotonic admission time (deadline slack base)
 
 
@@ -150,7 +186,9 @@ class VisionEngine:
         self.planner = TilePlanner(
             self.batcher,
             cost_model if cost_model is not None else TileCostModel(cfg),
-            mode=self.vc.planner)
+            mode=self.vc.planner,
+            quality=QualityController(self.vc.quality_config,
+                                      num_slots=self.vc.max_batch))
         self._live: Dict[int, _Live] = {}   # slot -> state
         # not-yet-arrived requests as (absolute arrival step, request):
         # arrival_step is relative to the serve() call that submitted it,
@@ -169,6 +207,17 @@ class VisionEngine:
         self._n_patches_max = (cfg.image_size // cfg.patch_size) ** 2
         self._use_tdm = (cfg.pruning.token_pruning_enabled
                          if self.vc.use_tdm is None else self.vc.use_tdm)
+        # TDM ordinal bookkeeping: _tdm_before[si] = how many TDM segments
+        # precede plan index si — the keep-schedule index of the NEXT TDM
+        # a request at seg_idx=si will hit (executed entries are history)
+        self._tdm_before: List[int] = []
+        n_tdm = 0
+        for seg in self.segments.plan:
+            self._tdm_before.append(n_tdm)
+            if seg[0] == "tdm":
+                n_tdm += 1
+        self._tdm_before.append(n_tdm)  # seg_idx == len(plan) (finished)
+        self._n_tdm = n_tdm
 
     @classmethod
     def from_pruned(cls, cfg: ModelConfig, params: Dict, scores: Dict,
@@ -198,22 +247,28 @@ class VisionEngine:
             self._validate(r)  # request must not leak its siblings into
         for r in requests:     # the engine (they'd surface next serve())
             if r.prune_load is None:
+                sched = self._base_schedule(r)
                 traj = PR.token_trajectory(
-                    self.cfg, r.n_patches,
-                    r_t=r.r_t, use_tdm=self._use_tdm)
-                r.prune_load = float(sum(traj))
+                    self.cfg, r.n_patches, use_tdm=self._use_tdm,
+                    schedule=sched if self._use_tdm else None,
+                    soft=r.soft_prune)
+                r.prune_load_base = float(sum(traj))
+                r.prune_load = r.prune_load_base
+                r.submit_t = time.monotonic()
                 if r.deadline_ms is not None:
                     # deadline-aware admission annotation: discount the
                     # post-prune load by how tight the deadline is relative
                     # to the request's modeled solo latency, so the SAME
                     # prune_pressure_aware policy admits urgent requests
-                    # earlier (no new policy needed)
+                    # earlier (no new policy needed). Recomputed every
+                    # admission pass (_refresh_prune_loads): waiting time
+                    # consumes slack, so urgency RISES while queued.
                     cm = self.planner.cost_model
-                    r_t = self.cfg.pruning.r_t if r.r_t is None else r.r_t
-                    solo_ms = cm.ms(cm.trajectory_cycles(
-                        self._traj_from(0, r.n_patches, r_t)))
+                    r.solo_ms = cm.ms(cm.trajectory_cycles(
+                        self._traj_from(0, r.n_patches, sched,
+                                        r.soft_prune)))
                     r.prune_load *= min(1.0, r.deadline_ms
-                                        / max(solo_ms, 1e-9))
+                                        / max(r.solo_ms, 1e-9))
             self._pending.append((base + r.arrival_step, r))
         self._pending.sort(key=lambda ar: ar[0])
         self._plan_cache = None  # stale speculation from a previous serve
@@ -224,6 +279,7 @@ class VisionEngine:
             # their logits materialize (the pipeline completion fills out)
             self._retire_finished()
             self._admit_arrivals()
+            self._refresh_prune_loads(time.monotonic())
             staged = None
             while True:
                 # requests submitted after staging began belong in THIS
@@ -267,6 +323,8 @@ class VisionEngine:
             **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
             **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
             **{f"plan_{k}": v for k, v in self.planner.stats().items()},
+            **{f"quality_{k}": v
+               for k, v in self.planner.quality.stats().items()},
         }
 
     # -- engine internals --------------------------------------------------
@@ -283,12 +341,30 @@ class VisionEngine:
             raise ValueError(f"request {r.uid}: patch dim "
                              f"{r.patches.shape[-1]} != {pdim}")
         r_t = self.cfg.pruning.r_t if r.r_t is None else r.r_t
-        if not 0.0 < r_t <= 1.0:
-            raise ValueError(f"request {r.uid}: r_t must be in (0, 1], "
-                             f"got {r_t}")
-        if r.deadline_ms is not None and r.deadline_ms <= 0.0:
-            raise ValueError(f"request {r.uid}: deadline_ms must be "
-                             f"positive, got {r.deadline_ms}")
+        # explicit isfinite: NaN fails every comparison, so `not a < x <= b`
+        # happens to catch it, but inf/NaN deserve their own message and
+        # deadline_ms's `<= 0.0` test would WAVE A NaN THROUGH
+        if not (math.isfinite(r_t) and 0.0 < r_t <= 1.0):
+            raise ValueError(f"request {r.uid}: r_t must be finite in "
+                             f"(0, 1], got {r_t}")
+        if r.deadline_ms is not None and not (
+                math.isfinite(r.deadline_ms) and r.deadline_ms > 0.0):
+            raise ValueError(f"request {r.uid}: deadline_ms must be finite "
+                             f"and positive, got {r.deadline_ms}")
+        if r.keep_schedule is not None:
+            ks = tuple(float(v) for v in r.keep_schedule)
+            if self._use_tdm and len(ks) != self._n_tdm:
+                raise ValueError(
+                    f"request {r.uid}: keep_schedule has {len(ks)} entries, "
+                    f"model has {self._n_tdm} TDM segments")
+            for v in ks:
+                if not (math.isfinite(v) and 0.0 < v <= 1.0):
+                    raise ValueError(f"request {r.uid}: keep_schedule "
+                                     f"entries must be finite in (0, 1], "
+                                     f"got {v}")
+        if r.quality is not None and r.quality not in QUALITY_MODES:
+            raise ValueError(f"request {r.uid}: quality must be one of "
+                             f"{QUALITY_MODES}, got {r.quality!r}")
 
     def _admit_arrivals(self) -> None:
         arrived = [r for at, r in self._pending if at <= self.steps]
@@ -306,40 +382,93 @@ class VisionEngine:
                 req=req, seg_idx=0,
                 x=np.asarray(req.patches, np.float32),
                 n_tokens=req.n_patches,
-                r_t=self.cfg.pruning.r_t if req.r_t is None else req.r_t,
+                schedule=self._base_schedule(req),
+                soft=req.soft_prune,
                 admit_t=time.monotonic())
 
-    def _traj_from(self, seg_idx: int, n_tokens: int, r_t: float):
+    def _base_schedule(self, r: VisionRequest) -> Tuple[float, ...]:
+        """The request's own per-TDM keep schedule BEFORE any controller
+        tightening: an explicit ``keep_schedule`` verbatim, else its
+        ``r_t`` (else the config's) broadcast over the TDM segments."""
+        if r.keep_schedule is not None:
+            return tuple(float(v) for v in r.keep_schedule)
+        return PR.keep_schedule(self.cfg, r_t=r.r_t, use_tdm=self._use_tdm)
+
+    def _refresh_prune_loads(self, now: float) -> None:
+        """Re-discount waiting deadline requests' ``prune_load`` by their
+        CURRENT slack each admission pass (not once at submit): waiting
+        time consumes slack, so a queued deadline request's urgency rises
+        until ``prune_pressure_aware`` prefers it."""
+        for req in self.scheduler.waiting:
+            if (req.deadline_ms is None or req.prune_load_base is None
+                    or req.solo_ms is None or req.submit_t is None):
+                continue
+            left = req.deadline_ms - (now - req.submit_t) * 1e3
+            req.prune_load = req.prune_load_base * min(
+                1.0, max(left, 0.0) / max(req.solo_ms, 1e-9))
+
+    def _traj_from(self, seg_idx: int, n_tokens: int,
+                   schedule: Sequence[float], soft: bool = False):
         """Remaining (stage key, entry token count) trajectory from segment
-        ``seg_idx`` at ``n_tokens`` real tokens. A stage key is the batcher
+        ``seg_idx`` at ``n_tokens`` real tokens under ``schedule`` (full
+        per-TDM keep schedule; entries before this point are history —
+        already baked into ``n_tokens``). A stage key is the batcher
         grouping identity — the segment (weights + static layer range)
         plus, at TDM segments, the static keep count (tiles must be
-        k-uniform because k is a compile-time top-k width). Offsets align
-        with engine steps, which is what the planner's fusion and deadline
-        logic rely on."""
+        k-uniform because k is a compile-time top-k width); soft-pruning
+        TDM stages append a ``"soft"`` marker (different kernel, and the
+        package row makes padded-batch membership semantics different), so
+        soft and hard requests never share a TDM tile while non-TDM
+        segments still batch together. Offsets align with engine steps,
+        which is what the planner's fusion and deadline logic rely on."""
         entries = []
         n = n_tokens
+        ti = self._tdm_before[seg_idx]
         for si in range(seg_idx, len(self.segments.plan)):
             seg = self.segments.plan[si]
             if seg[0] == "tdm":
-                k = PR.tdm_keep_count(n, r_t)
-                entries.append(((si, seg, k), n))
+                r = schedule[ti]
+                if soft:
+                    k = PR.tdm_soft_keep_count(n, r, has_pkg=ti > 0)
+                    entries.append(((si, seg, k, "soft"), n))
+                else:
+                    k = PR.tdm_keep_count(n, r)
+                    entries.append(((si, seg, k), n))
                 n = k + 2
+                ti += 1
             else:
                 entries.append(((si, seg, None), n))
                 if seg[0] == "embed":
                     n += 1  # + CLS
         return tuple(entries)
 
-    def _stage_key(self, st: _Live):
-        """Current batcher grouping identity (= trajectory offset 0)."""
-        seg = self.segments.plan[st.seg_idx]
-        if seg[0] == "tdm":
-            return (st.seg_idx, seg, PR.tdm_keep_count(st.n_tokens, st.r_t))
-        return (st.seg_idx, seg, None)
+    def _resolve_schedule(self, st: _Live, now: float) -> Tuple[float, ...]:
+        """The EFFECTIVE keep schedule for this staging pass: the request's
+        base schedule run through the planner's QualityController with the
+        current queue pressure and deadline slack. Pure (controller
+        counters fold in at dispatch) — safe under staging drop/replan,
+        and an exact identity when the controller is off."""
+        q = self.planner.quality
+        if not q.enabled:
+            return st.schedule
+        done = self._tdm_before[st.seg_idx]
+        left = rem = None
+        if st.req.deadline_ms is not None:
+            left = st.req.deadline_ms - (now - st.admit_t) * 1e3
+            cm = self.planner.cost_model
 
-    def _plan_item(self, st: _Live, now: float) -> PlanItem:
-        traj = self._traj_from(st.seg_idx, st.n_tokens, st.r_t)
+            def rem(sched, _st=st, _cm=cm):
+                return _cm.ms(_cm.trajectory_cycles(self._traj_from(
+                    _st.seg_idx, _st.n_tokens, sched, _st.soft)))
+
+        return q.resolve(st.schedule, done=done,
+                         preference=st.req.quality,
+                         queue_depth=len(self.scheduler.waiting),
+                         deadline_left_ms=left, remaining_ms=rem)
+
+    def _plan_item(self, st: _Live, now: float,
+                   schedule: Sequence[float]) -> PlanItem:
+        traj = self._traj_from(st.seg_idx, st.n_tokens, schedule, st.soft)
         left = None
         if st.req.deadline_ms is not None:
             left = st.req.deadline_ms - (now - st.admit_t) * 1e3
@@ -410,17 +539,47 @@ class VisionEngine:
         logits independent of pipeline depth."""
         slots = sorted(self._live)
         now = time.monotonic()
-        items = [self._plan_item(self._live[s], now) for s in slots]
+        # quality resolution happens ONCE per staging pass, before planning:
+        # the effective schedules shape the trajectories the planner prices,
+        # so the plan, the stage keys and the dispatched k values all agree
+        eff = {s: self._resolve_schedule(self._live[s], now) for s in slots}
+        items = [self._plan_item(self._live[s], now, eff[s]) for s in slots]
         plan = self._next_plan(items)
         n_urgent = plan.urgent_tile_count()
         n_segs = len(self.segments.plan)
+
+        # controller accounting for this step (folded in at dispatch only —
+        # a dropped staging pass leaves no trace)
+        q_dec = q_tight = q_dl = 0
+        q_levels: List[float] = []
+        q = self.planner.quality
+        if q.enabled:
+            depth = len(self.scheduler.waiting)
+            for s in slots:
+                st = self._live[s]
+                done = self._tdm_before[st.seg_idx]
+                pairs = list(zip(st.schedule[done:], eff[s][done:]))
+                q_dec += len(pairs)
+                hit = [e for b, e in pairs if e < b - 1e-12]
+                q_tight += len(hit)
+                q_levels.extend(hit)
+                if st.req.deadline_ms is not None and hit:
+                    # how much of the tightening came from the deadline
+                    # loop (vs queue pressure alone)
+                    e0 = q.resolve(st.schedule, done=done,
+                                   preference=st.req.quality,
+                                   queue_depth=depth)
+                    q_dl += sum(1 for a, b in zip(e0[done:], eff[s][done:])
+                                if b < a - 1e-12)
 
         tile_runs = []
         for tile in plan.tiles:
             member_slots = [slots[i] for i in tile.members]
             states = [self._live[s] for s in member_slots]
-            seg = self.segments.plan[states[0].seg_idx]
-            k = self._stage_key(states[0])[2]
+            # the tile's stage key is the source of truth for what runs:
+            # (si, segment, k[, "soft"]) — states[0] only supplies data
+            seg, k = tile.stage[1], tile.stage[2]
+            soft = len(tile.stage) > 3
             # token/batch padding is exactness-neutral; building the batch
             # from device handles (pad + stack) keeps staging async — the
             # old host-side scatter would block on the previous step
@@ -439,22 +598,43 @@ class VisionEngine:
                 n_valid = np.concatenate(
                     [n_valid, np.full(tile.b_tile - len(states), tile.n_tile,
                                       np.int32)])
-            tile_runs.append((tile, member_slots, seg, k, batch, n_valid))
+            pkg_mass = None
+            if soft and self._tdm_before[tile.stage[0]] > 0:
+                # every member past its first soft TDM carries a package
+                # mass; batch-pad rows get 0 (their packages are don't-care)
+                pkg_mass = jnp.stack(
+                    [jnp.asarray(st.pkg_mass, jnp.float32).reshape(())
+                     for st in states]
+                    + [jnp.zeros((), jnp.float32)]
+                    * (tile.b_tile - len(states)))
+            tile_runs.append((tile, member_slots, seg, k, soft, batch,
+                              n_valid, pkg_mass))
 
         lane_runs = []
         for lane in plan.lanes:
             slot = slots[lane.member]
             st = self._live[slot]
-            steps = tuple((stage[1], stage[2])
+            steps = tuple((stage[1], stage[2]) if len(stage) == 3
+                          else (stage[1], stage[2], True)
                           for stage, _ in lane.trajectory)
+            seed = None
+            if st.pkg_mass is not None:
+                seed = jnp.asarray(st.pkg_mass, jnp.float32).reshape(1)
             lane_runs.append((slot, steps, jnp.asarray(st.x,
-                                                       jnp.float32)[None]))
+                                                       jnp.float32)[None],
+                              seed))
 
         produced: List[Any] = []  # (req, y handle, row) head/lane outputs
 
         def run_tile(tr):
-            tile, member_slots, seg, k, batch, n_valid = tr
-            y = self.segments.run(seg, batch, n_valid=n_valid, k=k)
+            tile, member_slots, seg, k, soft, batch, n_valid, pkg_mass = tr
+            mass = None
+            if soft:
+                y, mass = self.segments.run(seg, batch, n_valid=n_valid,
+                                            k=k, soft=True,
+                                            pkg_mass=pkg_mass)
+            else:
+                y = self.segments.run(seg, batch, n_valid=n_valid, k=k)
             kind = seg[0]
             for b, slot in enumerate(member_slots):
                 st = self._live[slot]
@@ -464,8 +644,10 @@ class VisionEngine:
                 elif kind == "layers":
                     st.x = y[b, : st.n_tokens]
                 elif kind == "tdm":
-                    st.n_tokens = k + 2       # CLS + k kept + fused
+                    st.n_tokens = k + 2       # CLS + k kept + fused/package
                     st.x = y[b, : st.n_tokens]
+                    if soft:
+                        st.pkg_mass = mass[b]
                 else:  # head
                     produced.append((st.req, y, b))
                 st.seg_idx += 1
@@ -477,14 +659,17 @@ class VisionEngine:
             # the step and must not sit on a deadline-urgent request's
             # critical path
             handles = [run_tile(tr) for tr in tile_runs[:n_urgent]]
-            for slot, steps, x1 in lane_runs:
+            for slot, steps, x1, seed in lane_runs:
                 st = self._live[slot]
-                y = self.segments.run_fused(steps, x1)
+                y = self.segments.run_fused(steps, x1, pkg_mass=seed)
                 produced.append((st.req, y, 0))
                 st.seg_idx = n_segs
                 handles.append(y)
             handles += [run_tile(tr) for tr in tile_runs[n_urgent:]]
             self.planner.commit(plan)
+            if q.enabled:
+                q.record(q_dec, q_tight, q_levels,
+                         deadline_tightened=q_dl)
             self.steps += 1
             return handles
 

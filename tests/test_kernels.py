@@ -182,3 +182,55 @@ def test_kernels_honor_env_interpret(monkeypatch):
     out = sbmm(x, pw, tm=8)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x) @ w,
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# token_package (soft-pruning TDM)
+# ---------------------------------------------------------------------------
+def test_token_package_ref_oracle_edge_k():
+    """Kernel vs jnp reference at the k extremes: k=1 (drop almost
+    everything into the package) and k=n (keep every row; the package is
+    an empty weighted sum)."""
+    from repro.kernels.token_package import (token_package_pallas,
+                                             token_package_ref)
+
+    key = jax.random.PRNGKey(3)
+    n, d = 9, 32
+    z = jax.random.normal(key, (n, d), jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    for keep in (jnp.asarray([4], jnp.int32),
+                 jnp.arange(n, dtype=jnp.int32)):
+        wk = jnp.where(jnp.isin(jnp.arange(n), keep), 0.0, w)
+        out = token_package_pallas(z, keep, wk, td=16)
+        ref = token_package_ref(z, keep, wk)
+        assert out.shape == (len(keep) + 1, d)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,N,D,k", [(2, 17, 64, 1), (1, 9, 32, 7),
+                                     (3, 33, 128, 10)])
+def test_token_package_matches_tdm_soft(B, N, D, k):
+    """The batched wrapper (padding + mass substitution + vmap) agrees
+    with the pure-jnp soft TDM, including the accumulated masses across a
+    chained second application."""
+    from repro.core.token_pruning import tdm_soft
+    from repro.kernels.token_package import token_package
+
+    key = jax.random.PRNGKey(B * N + k)
+    z = jax.random.normal(key, (B, N, D), jnp.float32)
+    s = jax.random.uniform(jax.random.fold_in(key, 1), (B, N))
+    out_k, mass_k = token_package(z, s, k=k, td=32)
+    out_j, mass_j = tdm_soft(z, s, k=k)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mass_k), np.asarray(mass_j),
+                               rtol=1e-5)
+    # chained: the package row participates at its accumulated mass
+    s2 = jax.random.uniform(jax.random.fold_in(key, 2), out_k.shape[:2])
+    k2 = max(1, k - 1)
+    out_k2, mass_k2 = token_package(out_k, s2, k=k2, pkg_mass=mass_k, td=32)
+    out_j2, mass_j2 = tdm_soft(out_j, s2, k=k2, pkg_mass=mass_j)
+    np.testing.assert_allclose(np.asarray(out_k2), np.asarray(out_j2),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mass_k2), np.asarray(mass_j2),
+                               rtol=1e-4)

@@ -184,3 +184,70 @@ def test_lm_prefill_token_pruning():
     d = np.asarray(dense.logits[:, -1])
     corr = np.corrcoef(a.ravel(), d.ravel())[0, 1]
     assert corr > 0.98
+
+
+# ---------------------------------------------------------------------------
+# soft-pruning TDM (package token)
+# ---------------------------------------------------------------------------
+def test_tdm_soft_first_package_is_weighted_average():
+    """First soft TDM (no package yet): dropped body tokens fold into one
+    package row = score-weighted average, and the returned mass is the
+    dropped score sum."""
+    z, s = _mk(B=1, N=6, D=4)
+    k = 2
+    out, mass = tp.tdm_soft(z, s, k=k)
+    assert out.shape == (1, k + 2, 4)
+    body_s = np.asarray(s[0, 1:], np.float64)
+    body_z = np.asarray(z[0, 1:], np.float64)
+    order = np.argsort(-body_s)
+    kept, dropped = order[:k], order[k:]
+    # CLS passes through, kept rows in score order
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(z[0, 0]),
+                               atol=1e-6)
+    w = body_s[dropped]
+    ref_pkg = (w[:, None] * body_z[dropped]).sum(0) / (w.sum() + 1e-9)
+    np.testing.assert_allclose(np.asarray(out[0, -1]), ref_pkg, atol=1e-5)
+    np.testing.assert_allclose(float(mass[0]), w.sum(), rtol=1e-6)
+
+
+def test_tdm_soft_mass_accumulates_across_steps():
+    """A second soft TDM folds its drops into the EXISTING package: the
+    old package participates at its accumulated mass (raw-score scale)
+    and the new mass is old mass + newly dropped score sum."""
+    z, s = _mk(B=2, N=17, D=8)
+    out1, mass1 = tp.tdm_soft(z, s, r_t=0.5)
+    import jax
+    s2 = jax.random.uniform(jax.random.PRNGKey(9), out1.shape[:2])
+    out2, mass2 = tp.tdm_soft(out1, s2, k=3, pkg_mass=mass1)
+    assert out2.shape[1] == 3 + 2
+    body2 = np.asarray(s2[:, 1:], np.float64)  # includes the package col
+    for b in range(2):
+        scores_b = body2[b].copy()
+        order = np.argsort(-np.where(
+            np.arange(len(scores_b)) == len(scores_b) - 1, -np.inf,
+            scores_b))
+        dropped = order[3:]
+        dropped = dropped[dropped != len(scores_b) - 1]
+        expect = scores_b[dropped].sum() + float(mass1[b])
+        np.testing.assert_allclose(float(mass2[b]), expect, rtol=1e-5)
+    assert bool((np.asarray(mass2) > np.asarray(mass1)).all())
+
+
+def test_tdm_soft_package_row_pinned_out_of_topk():
+    """With a package present, top-k never selects the package row even
+    when its score is the highest — it is pinned at the package slot."""
+    z, s = _mk(B=1, N=8, D=4)
+    s = s.at[0, -1].set(100.0)  # package row (last body row) scores huge
+    out, mass = tp.tdm_soft(z, s, k=2, pkg_mass=jnp.ones((1,)))
+    # kept rows are drawn from the non-package body rows only
+    kept = np.asarray(out[0, 1:3])
+    body = np.asarray(z[0, 1:-1])
+    for row in kept:
+        assert any(np.allclose(row, b) for b in body)
+
+
+def test_tdm_soft_explicit_k_beyond_body_raises():
+    z, s = _mk(B=1, N=6, D=4)
+    import pytest
+    with pytest.raises(ValueError):
+        tp.tdm_soft(z, s, k=5, pkg_mass=jnp.ones((1,)))

@@ -341,3 +341,74 @@ def test_from_pruned_builds_serving_engine(rng_key):
     for lg in out.values():
         assert lg.shape == (cfg.num_classes,)
         assert np.isfinite(lg).all()
+
+
+def test_validation_rejects_nonfinite_and_bad_quality(packed_vit):
+    """NaN fails every range comparison, so it used to slip through the
+    ``deadline_ms <= 0`` check; non-finite r_t / deadline / schedules and
+    unknown quality preferences must all be rejected at submit."""
+    cfg, masked, packed = packed_vit
+    pdim = cfg.patch_size ** 2 * 3
+    eng = VisionEngine(cfg, masked, packed)
+
+    def rq(**kw):
+        return VisionRequest(uid=0, patches=np.zeros((4, pdim), np.float32),
+                             **kw)
+
+    for bad in (float("nan"), float("inf"), -float("inf")):
+        with pytest.raises(ValueError, match="r_t"):
+            eng.serve([rq(r_t=bad)])
+        with pytest.raises(ValueError, match="deadline_ms"):
+            eng.serve([rq(deadline_ms=bad)])
+    with pytest.raises(ValueError, match="keep_schedule"):
+        eng.serve([rq(keep_schedule=(float("nan"),))])
+    with pytest.raises(ValueError, match="keep_schedule"):
+        eng.serve([rq(keep_schedule=(0.5, 0.5))])  # model has 1 TDM
+    with pytest.raises(ValueError, match="quality"):
+        eng.serve([rq(quality="fastest")])
+
+
+def test_prune_load_refreshes_while_waiting(packed_vit):
+    """The deadline discount is recomputed each admission pass: waiting
+    time consumes slack, so a queued deadline request's annotated load
+    keeps falling (its admission urgency keeps RISING) — not frozen at
+    its submit-time value."""
+    import time as _time
+
+    cfg, masked, packed = packed_vit
+    pdim = cfg.patch_size ** 2 * 3
+    eng = VisionEngine(cfg, masked, packed)
+    req = VisionRequest(uid=0, patches=np.zeros((9, pdim), np.float32),
+                        deadline_ms=100.0, prune_load_base=100.0,
+                        prune_load=100.0, solo_ms=50.0,
+                        submit_t=_time.monotonic())
+    eng.scheduler.waiting.append(req)
+    eng._refresh_prune_loads(req.submit_t)      # full slack at submit
+    assert req.prune_load == pytest.approx(100.0)
+    eng._refresh_prune_loads(req.submit_t + 0.075)  # 75ms waited
+    mid = req.prune_load
+    assert mid == pytest.approx(100.0 * (25.0 / 50.0))
+    eng._refresh_prune_loads(req.submit_t + 1.0)    # deadline blown
+    assert req.prune_load == 0.0 < mid
+
+
+def test_soft_prune_requests_bitexact_vs_offline(packed_vit):
+    """Soft-pruning requests (package token) served in a mixed batch with
+    hard-pruning ones: each bit-exact against its own offline path."""
+    cfg, masked, packed = packed_vit
+    reqs = _mixed_requests(cfg, [(16, None, 0), (9, 0.5, 0), (16, 0.5, 1)])
+    reqs[0].soft_prune = True
+    reqs[1].soft_prune = True
+    eng = VisionEngine(cfg, masked, packed,
+                       VisionEngineConfig(max_batch=3, planner="full",
+                                          pipeline_depth=2))
+    out = eng.serve(reqs)
+    for r in reqs:
+        c = cfg if r.r_t is None else dataclasses.replace(
+            cfg, pruning=dataclasses.replace(cfg.pruning, r_t=r.r_t))
+        ref = np.asarray(PR.forward_vit_packed(
+            c, masked, packed, r.patches[None],
+            soft=r.soft_prune).logits[0])
+        assert np.array_equal(ref, out[r.uid]), r.uid
+    st = eng.stats()
+    assert st["jit_compile_count"] <= st["compile_budget"]
