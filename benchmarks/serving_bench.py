@@ -152,7 +152,8 @@ def main():
         config={k: v for k, v in vars(args).items() if k != "out"},
         results=res,
         extra={"continuous_vs_static": speedup,
-               "per_slot_vs_reprefill": vs_legacy})
+               "per_slot_vs_reprefill": vs_legacy},
+        seed=args.seed)
     print(f"wrote {args.out}")
     if not ok:
         print("FAIL: not every request was served", file=sys.stderr)

@@ -496,7 +496,8 @@ def main():
                "planned_vs_balanced_mixed": plan_mixed,
                "planned_vs_balanced_sparse": plan_sparse,
                "sparse_measured_saving_ms": measured_saving_ms,
-               "calibration": fit})
+               "calibration": fit},
+        seed=args.seed)
     print(f"wrote {args.out}")
     if not ok:
         print("FAIL: unserved requests, recompile budget exceeded, "

@@ -1,14 +1,20 @@
 """Schema-versioned JSON bench artifacts.
 
 Every benchmark that CI uploads (``BENCH_serving.json``,
-``BENCH_vision.json``, ...) writes through :func:`write_bench_artifact`, so
-downstream consumers (dashboards, regression diffing, the nightly lane) see
-ONE envelope instead of per-script ad-hoc dicts:
+``BENCH_vision.json``, ``BENCH_traffic.json``, ...) writes through
+:func:`write_bench_artifact`, so downstream consumers (dashboards,
+regression diffing, the nightly lane) see ONE envelope instead of
+per-script ad-hoc dicts:
 
     {
-      "schema_version": 1,
+      "schema_version": 3,
       "kind":    "<benchmark family, e.g. 'serving' | 'vision'>",
       "created_unix": <float epoch seconds>,
+      "provenance": {           # what it takes to REPRODUCE the run
+        "git_sha": "<HEAD sha or null outside a checkout>",
+        "seed": <int | null>,   # the run's root RNG seed
+        "trace_fingerprint": "<sha256 | null>"  # replayed workload id
+      },
       "config":  {...},         # the knobs the run was configured with
       "results": {...},         # per-mode measurements
       ...extra top-level summary keys (speedups etc.)
@@ -23,29 +29,55 @@ Version history:
       floor sweep rows: modeled_ms, top1_agreement, tightened_steps) and
       the timed arms record the controller's quality/keep-floor knobs in
       ``config``.
+  3 — reserved ``provenance`` block (git_sha, seed, trace_fingerprint):
+      a bench row is only evidence if the run is reconstructible — which
+      code, which RNG stream, and (for trace-replay benches) which exact
+      workload. Fields are null when unknown; the block is always present.
 """
 from __future__ import annotations
 
 import json
+import subprocess
 import time
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
-_RESERVED = ("schema_version", "kind", "created_unix", "config", "results")
+_RESERVED = ("schema_version", "kind", "created_unix", "provenance",
+             "config", "results")
+
+
+def git_sha() -> Optional[str]:
+    """HEAD commit of the working tree (None outside a git checkout or
+    without git on PATH) — recorded, never trusted for logic."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
 
 
 def write_bench_artifact(path: str, kind: str, config: Dict[str, Any],
                          results: Dict[str, Any],
-                         extra: Optional[Dict[str, Any]] = None
+                         extra: Optional[Dict[str, Any]] = None,
+                         seed: Optional[int] = None,
+                         trace_fingerprint: Optional[str] = None
                          ) -> Dict[str, Any]:
     """Write the envelope to ``path``; returns the dict written. ``extra``
     keys land at the top level (summary scalars) and must not collide with
-    the envelope's own fields."""
+    the envelope's own fields. ``seed`` / ``trace_fingerprint`` fill the
+    provenance block (the git SHA is captured automatically)."""
     artifact: Dict[str, Any] = {
         "schema_version": SCHEMA_VERSION,
         "kind": kind,
         "created_unix": time.time(),
+        "provenance": {
+            "git_sha": git_sha(),
+            "seed": seed,
+            "trace_fingerprint": trace_fingerprint,
+        },
         "config": config,
         "results": results,
     }
@@ -61,8 +93,9 @@ def write_bench_artifact(path: str, kind: str, config: Dict[str, Any],
 
 def load_bench_artifact(path: str,
                         expect_kind: Optional[str] = None) -> Dict[str, Any]:
-    """Read + validate an artifact envelope (schema version and, if given,
-    kind). The smoke lanes use this to fail loudly on malformed output."""
+    """Read + validate an artifact envelope (schema version, provenance
+    block shape and, if given, kind). The smoke lanes use this to fail
+    loudly on malformed output."""
     with open(path) as f:
         artifact = json.load(f)
     missing = [k for k in _RESERVED if k not in artifact]
@@ -72,6 +105,11 @@ def load_bench_artifact(path: str,
         raise ValueError(
             f"{path}: schema_version {artifact['schema_version']} != "
             f"supported {SCHEMA_VERSION}")
+    prov = artifact["provenance"]
+    missing_prov = [k for k in ("git_sha", "seed", "trace_fingerprint")
+                    if k not in prov]
+    if missing_prov:
+        raise ValueError(f"{path}: provenance block missing {missing_prov}")
     if expect_kind is not None and artifact["kind"] != expect_kind:
         raise ValueError(f"{path}: kind {artifact['kind']!r} != "
                          f"{expect_kind!r}")

@@ -23,7 +23,7 @@ from repro.serving.cache_manager import (KVCacheManager, bucket_length,
                                          prune_kv_caches)
 from repro.serving.engine import (ElasticContext, EngineConfig, Request,
                                   ServeEngine)
-from repro.serving.pipeline import StagedStep, StepPipeline
+from repro.serving.pipeline import StagedStep, StepPipeline, StepReport
 from repro.serving.planner import (PLANNER_MODES, ExecutionPlan, FusedLane,
                                    PlanItem, PlanStats, TileCostModel,
                                    TilePlanner)
@@ -38,7 +38,7 @@ from repro.serving.vision import (VisionEngine, VisionEngineConfig,
 __all__ = ["ServeEngine", "EngineConfig", "ElasticContext", "Request",
            "Scheduler", "KVCacheManager", "ModelRunner", "prune_kv_caches",
            "bucket_length", "build_padded_batch",
-           "StepPipeline", "StagedStep",
+           "StepPipeline", "StagedStep", "StepReport",
            "VisionEngine", "VisionEngineConfig", "VisionRequest",
            "RaggedBatcher", "Tile",
            "TilePlanner", "TileCostModel", "ExecutionPlan", "PlanItem",

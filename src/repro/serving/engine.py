@@ -79,7 +79,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist.elastic import MeshPlan, degradation_path, first_fit
 from repro.serving.cache_manager import KVCacheManager, prune_kv_caches
-from repro.serving.pipeline import StagedStep, StepPipeline
+from repro.serving.pipeline import StagedStep, StepPipeline, StepReport
 from repro.serving.runner import ModelRunner, build_padded_batch
 from repro.serving.scheduler import Scheduler
 
@@ -230,6 +230,7 @@ class ServeEngine:
             "compile_count": self.runner.compile_count,
             "jit_compile_count": self.runner.jit_compile_count(),
             "prune_events": self.cache.prune_events,
+            **{f"sched_{k}": v for k, v in self.scheduler.stats().items()},
             **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
         }
 
@@ -290,51 +291,82 @@ class ServeEngine:
         retirement and slot reuse never block on in-flight device work.
         Depth 1 reproduces the synchronous loop step for step — identical
         tokens, identical admit/retire/degrade event stream."""
-        sched, kvm, runner = self.scheduler, self.cache, self.runner
-        use_slot = runner.supports_slot_prefill and self.ec.per_slot_prefill
-        sched.submit(requests)
-        if use_slot:
-            kvm.reset()  # per-slot admissions write into live caches;
-            # the fallback's whole-batch prefill allocates its own
+        self.enqueue(requests)
+        self.start_continuous()
         out: Dict[int, List[int]] = {}
+        while True:
+            rep = self.tick_continuous(out)
+            if not rep.dispatched:
+                break
+        self.pipeline.flush()
+        return out
+
+    def enqueue(self, requests: Sequence[Request]) -> None:
+        """Annotate + submit ``requests`` into the Scheduler (continuous
+        path). External drivers (``repro.traffic.harness``) pair this with
+        :meth:`start_continuous` / :meth:`tick_continuous` to interleave
+        submission with stepping on their own clock; an installed
+        ``Scheduler.admission_control`` hook gates each request here."""
+        self._annotate_prune_load(list(requests))
+        self.scheduler.submit(requests)
+
+    def start_continuous(self) -> None:
+        """Reset the continuous-serve step state (slot token vector,
+        dispatched-token counts, rebuild flag) ahead of a
+        :meth:`tick_continuous` loop."""
+        if (self.runner.supports_slot_prefill
+                and self.ec.per_slot_prefill):
+            self.cache.reset()  # per-slot admissions write into live
+            # caches; the fallback's whole-batch prefill allocates its own
         self._toks = np.zeros((self.ec.max_batch,), np.int64)
         self._scheduled = {}
-        rebuild = False  # caches must be rebuilt by a whole-batch prefill
+        self._rebuild = False  # caches need a whole-batch re-prefill
 
+    def tick_continuous(self, out: Dict[int, List[int]]) -> StepReport:
+        """One continuous-batching step: retire dispatched-to-budget
+        slots, admit waiting requests, stage + dispatch one step (per-slot
+        prefills or a batched decode) through the pipeline. Mirrors
+        ``VisionEngine.tick``: the returned :class:`StepReport` carries
+        host-deterministic facts only (``work_tokens`` = prompt tokens
+        prefilled + tokens decoded this step — the traffic harness prices
+        them onto its virtual clock), identical at every pipeline depth."""
+        sched, kvm, runner = self.scheduler, self.cache, self.runner
+        use_slot = runner.supports_slot_prefill and self.ec.per_slot_prefill
+        self._retire_scheduled()
+        if not sched.has_work():
+            return StepReport(dispatched=False)
+        if self.elastic is not None:
+            avail = self.elastic.device_count()
+            if avail < self._plan.num_devices:
+                # in-flight steps ran on the healthy mesh and their
+                # outputs stay valid; drain them so every
+                # req.generated is materialized before the rebuild
+                # re-prefills prompt + generated-so-far
+                self.pipeline.flush()
+                self._degrade(avail)
+                self._rebuild = True  # re-prefill on the degraded mesh
+        prefill_mark = self.admission_prefill_tokens
+        sched_mark = sum(self._scheduled.values())
+        staged: Optional[StagedStep] = None
+        admitted: List[Tuple[int, Request]] = []
         while True:
-            self._retire_scheduled()
-            if not sched.has_work():
+            sub_mark = sched.submitted_total
+            admitted.extend(sched.schedule())
+            if self._rebuild or (admitted and not use_slot):
+                break  # sync fallback below; nothing staged to drop
+            staged = (self._stage_admissions(admitted, out)
+                      if admitted else self._stage_decode(out))
+            if sched.submitted_total == sub_mark:
                 break
-            if self.elastic is not None:
-                avail = self.elastic.device_count()
-                if avail < self._plan.num_devices:
-                    # in-flight steps ran on the healthy mesh and their
-                    # outputs stay valid; drain them so every
-                    # req.generated is materialized before the rebuild
-                    # re-prefills prompt + generated-so-far
-                    self.pipeline.flush()
-                    self._degrade(avail)
-                    rebuild = True  # re-prefill on the degraded mesh
-            staged: Optional[StagedStep] = None
-            admitted: List[Tuple[int, Request]] = []
-            while True:
-                sub_mark = sched.submitted_total
-                admitted.extend(sched.schedule())
-                if rebuild or (admitted and not use_slot):
-                    break  # sync fallback below; nothing staged to drop
-                staged = (self._stage_admissions(admitted, out)
-                          if admitted else self._stage_decode(out))
-                if sched.submitted_total == sub_mark:
-                    break
-                # submitted while staging: drop + restage so the request
-                # is considered for THIS step's admissions — it never
-                # mutates a step already staged, and is never silently
-                # deferred past a step boundary
-                self.pipeline.drop(staged)
-                staged = None
-            if staged is not None:
-                self.pipeline.submit(staged)
-                continue
+            # submitted while staging: drop + restage so the request
+            # is considered for THIS step's admissions — it never
+            # mutates a step already staged, and is never silently
+            # deferred past a step boundary
+            self.pipeline.drop(staged)
+            staged = None
+        if staged is not None:
+            self.pipeline.submit(staged)
+        else:
             # sync fallback (recurrent families, elastic rebuild): a
             # whole-batch/per-slot re-prefill replaces every cache row at
             # once from prompt + generated-so-far, so drain the pipeline
@@ -342,15 +374,24 @@ class ServeEngine:
             self.pipeline.flush()
             toks = (self._rebuild_per_slot() if use_slot
                     else self._reprefill_active())
-            rebuild = False
+            self._rebuild = False
             produced = [(s, sched.running[s]) for s in sorted(sched.running)]
             for _, req in produced:
                 self._scheduled[req.uid] = \
                     self._scheduled.get(req.uid, 0) + 1
             self._toks = toks
             self._complete_tokens(toks, produced, out)
-        self.pipeline.flush()
-        return out
+        # which uids finished is host-known at dispatch time (one token
+        # per produced slot); their values may still be in flight
+        completed = tuple(sorted(
+            req.uid for req in sched.running.values()
+            if self._scheduled.get(req.uid, 0) >= req.max_new_tokens))
+        return StepReport(
+            dispatched=True,
+            work_tokens=(self.admission_prefill_tokens - prefill_mark
+                         + sum(self._scheduled.values()) - sched_mark),
+            admitted=tuple(sorted(r.uid for _, r in admitted)),
+            completed=completed)
 
     def _stage_admissions(self, admitted: List[Tuple[int, "Request"]],
                           out: Dict[int, List[int]]) -> StagedStep:

@@ -42,7 +42,40 @@ from typing import Any, Callable, Deque, Dict, Optional
 
 import jax
 
-__all__ = ["StagedStep", "StepPipeline"]
+__all__ = ["StagedStep", "StepPipeline", "StepReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    """What one engine ``tick`` did, in host-deterministic terms.
+
+    Both engines' incremental step APIs (``VisionEngine.tick``,
+    ``ServeEngine.tick_continuous``) return one of these so external
+    drivers — the trace-replay harness in ``repro.traffic`` foremost — can
+    account request lifecycles on a *virtual* clock: every field is known
+    at dispatch time from host bookkeeping alone (no device sync), and is
+    identical at every pipeline depth for the same request stream.
+
+    ``dispatched``   — whether the tick put a step on the device (False =
+                       idle bookkeeping tick: nothing admitted/running).
+    ``modeled_ms``   — the cost model's price of the dispatched step
+                       (vision: the committed ``ExecutionPlan``'s modeled
+                       cycles; LM engines leave it 0 and report
+                       ``work_tokens`` for the driver to price).
+    ``work_tokens``  — tokens this step dispatched (LM: prefilled +
+                       decoded; vision engines leave it 0).
+    ``admitted``     — uids that entered slots this tick (their first
+                       segment/prefill dispatches in this very step).
+    ``completed``    — uids whose final segment/token was dispatched this
+                       tick; their host-visible outputs materialize when
+                       the pipeline completes the step.
+    """
+
+    dispatched: bool
+    modeled_ms: float = 0.0
+    work_tokens: int = 0
+    admitted: tuple = ()
+    completed: tuple = ()
 
 
 @dataclasses.dataclass

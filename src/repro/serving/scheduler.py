@@ -8,7 +8,23 @@ through it, so they emit one unified event stream:
 
     ("admit",   uid)    request entered a slot
     ("retire",  uid)    request finished, slot freed
+    ("reject",  uid)    request refused at submit by the admission hook
     ("degrade", desc)   elastic event observed mid-stream (mesh shrank)
+
+Backlog accounting is first-class: :meth:`stats` reports queue depth (and
+its peak), slot occupancy, and the submit/reject/admit/retire counters.
+These are THE load counters — the ``QualityController`` reads the same
+``queue_depth`` the traffic harness reports, so "backlog pressure" means
+one thing everywhere.
+
+``admission_control`` is the load-shedding hook: an optional callable
+``hook(request) -> bool`` consulted once per submitted request. Returning
+``False`` refuses the request — it never enters the waiting queue, a
+``("reject", uid)`` event is emitted, and ``submitted_total`` does not
+advance (a rejected request must not trigger the engines' mid-step
+replans). ``repro.traffic.admission`` installs its cost-model controller
+here; the hook may mutate the request (e.g. set its quality preference)
+before accepting it.
 
 Admission order is policy-pluggable: pass ``policy="fifo"`` (default), one
 of the latency-aware built-ins below, or a callable
@@ -34,7 +50,8 @@ duck-typed (``prompt`` tokens or ``patches`` rows):
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 # Request lives in engine.py / vision.py (public API compat); import lazily
 # to avoid a cycle — the annotation below is intentionally loose.
@@ -85,7 +102,9 @@ _POLICIES: Dict[str, PolicyFn] = {
 class Scheduler:
     """Tracks waiting requests and slot occupancy; decides admissions."""
 
-    def __init__(self, num_slots: int, policy: "str | PolicyFn" = "fifo"):
+    def __init__(self, num_slots: int, policy: "str | PolicyFn" = "fifo",
+                 admission_control: Optional[Callable[[Request], bool]]
+                 = None):
         if num_slots <= 0:
             raise ValueError(f"num_slots must be positive, got {num_slots}")
         self.num_slots = num_slots
@@ -95,6 +114,9 @@ class Scheduler:
                                  f"{sorted(_POLICIES)}")
             policy = _POLICIES[policy]
         self.policy: PolicyFn = policy
+        # optional load-shedding gate consulted at submit (see module
+        # docstring); engines/harnesses may also install it post-hoc
+        self.admission_control = admission_control
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}   # slot -> request
         self.events: List[Tuple[str, Any]] = []
@@ -104,11 +126,25 @@ class Scheduler:
         # (stage is rolled back and rebuilt), never mutates the one being
         # staged, and is never silently deferred past a step boundary
         self.submitted_total = 0
+        self.rejected_total = 0
+        self.peak_queue_depth = 0
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> None:
-        self.waiting.extend(requests)
-        self.submitted_total += len(requests)
+        """Enqueue ``requests`` for admission, consulting the
+        ``admission_control`` hook (if any) one request at a time — so a
+        controller watching backlog sees each acceptance before pricing
+        the next request of the same batch."""
+        for req in requests:
+            if (self.admission_control is not None
+                    and not self.admission_control(req)):
+                self.rejected_total += 1
+                self.events.append(("reject", req.uid))
+                continue
+            self.waiting.append(req)
+            self.submitted_total += 1
+        self.peak_queue_depth = max(self.peak_queue_depth,
+                                    len(self.waiting))
 
     def free_slots(self) -> List[int]:
         return [i for i in range(self.num_slots) if i not in self.running]
@@ -147,3 +183,30 @@ class Scheduler:
     @property
     def num_admissions(self) -> int:
         return sum(1 for e in self.events if e[0] == "admit")
+
+    @property
+    def num_retirements(self) -> int:
+        return sum(1 for e in self.events if e[0] == "retire")
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests submitted but not yet in a slot — THE backlog-pressure
+        number (the QualityController and the traffic harness both read
+        this one, not private mirrors of it)."""
+        return len(self.waiting)
+
+    def stats(self) -> Dict[str, Any]:
+        """First-class backlog/occupancy block, shared by both engines'
+        ``stats()`` (prefixed ``sched_``) and sampled per virtual step by
+        the traffic harness."""
+        return {
+            "queue_depth": self.queue_depth,
+            "peak_queue_depth": self.peak_queue_depth,
+            "running": len(self.running),
+            "free_slots": self.num_slots - len(self.running),
+            "num_slots": self.num_slots,
+            "submitted_total": self.submitted_total,
+            "rejected_total": self.rejected_total,
+            "admitted_total": self.num_admissions,
+            "retired_total": self.num_retirements,
+        }

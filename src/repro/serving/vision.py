@@ -50,7 +50,7 @@ from repro.configs.base import ModelConfig
 from repro.core import packed_runner as PR
 from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
                                    TilePlanner)
-from repro.serving.pipeline import StagedStep, StepPipeline
+from repro.serving.pipeline import StagedStep, StepPipeline, StepReport
 from repro.serving.quality import (QUALITY_MODES, QualityConfig,
                                    QualityController)
 from repro.serving.ragged_batcher import RaggedBatcher
@@ -242,6 +242,19 @@ class VisionEngine:
         with ``arrival_step > 0`` join the waiting queue only once the
         engine has taken that many steps (staggered admission — the
         continuous-batching scenario)."""
+        out: Dict[int, np.ndarray] = {}
+        self.enqueue(requests)
+        while self._pending or self.scheduler.has_work():
+            self.tick(out)
+        self.finish()
+        return out
+
+    def enqueue(self, requests: Sequence[VisionRequest]) -> None:
+        """Validate + annotate ``requests`` and queue them for admission
+        (``arrival_step`` relative to the CURRENT engine step). ``serve``
+        is ``enqueue`` + ``tick`` until idle + ``finish``; external
+        drivers (``repro.traffic.harness``) call the pieces themselves to
+        interleave submission with stepping on their own clock."""
         base = self.steps
         for r in requests:  # validate ALL before enqueueing ANY: a bad
             self._validate(r)  # request must not leak its siblings into
@@ -271,39 +284,89 @@ class VisionEngine:
                                         / max(r.solo_ms, 1e-9))
             self._pending.append((base + r.arrival_step, r))
         self._pending.sort(key=lambda ar: ar[0])
-        self._plan_cache = None  # stale speculation from a previous serve
-        out: Dict[int, np.ndarray] = {}
-        while self._pending or self.scheduler.has_work():
-            # retire bookkeeping for the step in flight: trajectories are
-            # deterministic, so which slots finished is host-known before
-            # their logits materialize (the pipeline completion fills out)
-            self._retire_finished()
-            self._admit_arrivals()
-            self._refresh_prune_loads(time.monotonic())
+        self._plan_cache = None  # stale speculation from a previous batch
+
+    def tick(self, out: Dict[int, np.ndarray]) -> StepReport:
+        """One serve-loop iteration: retire finished slots, admit due
+        arrivals, stage + dispatch one engine step through the pipeline.
+        Returns a :class:`StepReport` of host-deterministic facts about
+        the step (dispatched plan's modeled cost, admitted/completed
+        uids) — identical at every pipeline depth for the same request
+        stream, which is what lets the traffic harness keep a virtual
+        clock that doesn't depend on wall time."""
+        # retire bookkeeping for the step in flight: trajectories are
+        # deterministic, so which slots finished is host-known before
+        # their logits materialize (the pipeline completion fills out)
+        self._retire_finished()
+        self._admit_arrivals()
+        self._refresh_prune_loads(time.monotonic())
+        live_before = {st.req.uid for st in self._live.values()}
+        cycles_before = self.planner.modeled_cycles
+        staged = None
+        while True:
+            # requests submitted after staging began belong in THIS
+            # plan: drop the staged step (rolls back, leaks nothing)
+            # and replan with the admissions included
+            sub_mark = self.scheduler.submitted_total
+            self.scheduler.schedule()
+            self._sync_admissions()
+            if not self._live:
+                break
+            staged = self._stage_step(out)
+            if self.scheduler.submitted_total == sub_mark:
+                break
+            self.pipeline.drop(staged)
             staged = None
-            while True:
-                # requests submitted after staging began belong in THIS
-                # plan: drop the staged step (rolls back, leaks nothing)
-                # and replan with the admissions included
-                sub_mark = self.scheduler.submitted_total
-                self.scheduler.schedule()
-                self._sync_admissions()
-                if not self._live:
-                    break
-                staged = self._stage_step(out)
-                if self.scheduler.submitted_total == sub_mark:
-                    break
-                self.pipeline.drop(staged)
-                staged = None
-            if staged is None:
-                if self._pending or self.scheduler.has_work():
-                    # nothing admitted yet (future arrivals): advance time
-                    self.steps += 1
-                continue
-            self.pipeline.submit(staged)
+        admitted = tuple(sorted(
+            {st.req.uid for st in self._live.values()} - live_before))
+        if staged is None:
+            if self._pending or self.scheduler.has_work():
+                # nothing admitted yet (future arrivals): advance time
+                self.steps += 1
+            return StepReport(dispatched=False, admitted=admitted)
+        self.pipeline.submit(staged)
+        n_segs = len(self.segments.plan)
+        completed = tuple(sorted(
+            st.req.uid for st in self._live.values()
+            if st.seg_idx >= n_segs))
+        return StepReport(
+            dispatched=True,
+            # planner.commit ran inside the dispatch above, so the ledger
+            # delta is exactly this step's ExecutionPlan modeled cost
+            modeled_ms=self.planner.cost_model.ms(
+                self.planner.modeled_cycles - cycles_before),
+            admitted=admitted, completed=completed)
+
+    def finish(self) -> None:
+        """Drain the pipeline (materializing every in-flight step's
+        outputs) and retire the finished slots."""
         self.pipeline.flush()
         self._retire_finished()
-        return out
+
+    def modeled_request_ms(self, r: VisionRequest,
+                           schedule: Optional[Sequence[float]] = None
+                           ) -> float:
+        """Cost-model price (ms) of serving ``r`` solo from scratch under
+        ``schedule`` (default: its own base keep schedule). The admission
+        controller prices marginal cost with this — including the
+        quality-degraded variant (pass the floored schedule)."""
+        sched = (tuple(float(v) for v in schedule) if schedule is not None
+                 else self._base_schedule(r))
+        cm = self.planner.cost_model
+        return cm.ms(cm.trajectory_cycles(
+            self._traj_from(0, r.n_patches, sched, r.soft_prune)))
+
+    def modeled_backlog_ms(self) -> float:
+        """Modeled time to drain the engine's current commitment: the
+        remaining trajectories of every live slot plus the full
+        trajectories of every waiting request — the capacity term the
+        admission controller compares offered work against."""
+        cm = self.planner.cost_model
+        ms = sum(self.modeled_request_ms(r) for r in self.scheduler.waiting)
+        for st in self._live.values():
+            ms += cm.ms(cm.trajectory_cycles(self._traj_from(
+                st.seg_idx, st.n_tokens, st.schedule, st.soft)))
+        return ms
 
     def stats(self) -> Dict[str, Any]:
         buckets = self.batcher.bucket_count
@@ -320,6 +383,7 @@ class VisionEngine:
             "compile_budget": buckets + trajectories,
             "plan_ahead_hits": self.plan_ahead_hits,
             "plan_ahead_drops": self.plan_ahead_drops,
+            **{f"sched_{k}": v for k, v in self.scheduler.stats().items()},
             **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
             **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
             **{f"plan_{k}": v for k, v in self.planner.stats().items()},
@@ -461,9 +525,11 @@ class VisionEngine:
                 return _cm.ms(_cm.trajectory_cycles(self._traj_from(
                     _st.seg_idx, _st.n_tokens, sched, _st.soft)))
 
+        # backlog pressure comes from the Scheduler's first-class counter —
+        # the same number its stats() block (and the traffic harness) report
         return q.resolve(st.schedule, done=done,
                          preference=st.req.quality,
-                         queue_depth=len(self.scheduler.waiting),
+                         queue_depth=self.scheduler.queue_depth,
                          deadline_left_ms=left, remaining_ms=rem)
 
     def _plan_item(self, st: _Live, now: float,
@@ -554,7 +620,7 @@ class VisionEngine:
         q_levels: List[float] = []
         q = self.planner.quality
         if q.enabled:
-            depth = len(self.scheduler.waiting)
+            depth = self.scheduler.queue_depth
             for s in slots:
                 st = self._live[s]
                 done = self._tdm_before[st.seg_idx]

@@ -1,0 +1,30 @@
+"""repro.traffic — trace-driven load, SLO accounting, admission control.
+
+Three modules, one pipeline: :mod:`~repro.traffic.workload` synthesizes
+seeded, replayable request traces (Poisson / bursty / diurnal arrivals ×
+request mixes, versioned JSONL); :mod:`~repro.traffic.harness` replays a
+trace against either serving engine on a deterministic virtual clock and
+reports latency percentiles, time-to-first-dispatch, goodput and
+deadline-miss rate; :mod:`~repro.traffic.admission` gates submission with
+the calibrated tile cost model — degrading quality (via the
+``QualityController``) before rejecting, so the queue stays bounded and
+goodput survives past the saturation knee.
+"""
+from repro.traffic.admission import (ADMISSION_ACTIONS, AdmissionController,
+                                     AdmissionDecision)
+from repro.traffic.harness import (LMDriver, RequestRecord, TrafficHarness,
+                                   VisionDriver, outputs_digest, percentile)
+from repro.traffic.workload import (ARRIVAL_PROCESSES, TRACE_SCHEMA_VERSION,
+                                    Trace, TraceRequest, TraceSpec,
+                                    bursty_arrivals, diurnal_arrivals,
+                                    load_trace, make_trace, poisson_arrivals,
+                                    save_trace, trace_fingerprint)
+
+__all__ = [
+    "ADMISSION_ACTIONS", "AdmissionController", "AdmissionDecision",
+    "LMDriver", "RequestRecord", "TrafficHarness", "VisionDriver",
+    "outputs_digest", "percentile",
+    "ARRIVAL_PROCESSES", "TRACE_SCHEMA_VERSION", "Trace", "TraceRequest",
+    "TraceSpec", "bursty_arrivals", "diurnal_arrivals", "load_trace",
+    "make_trace", "poisson_arrivals", "save_trace", "trace_fingerprint",
+]

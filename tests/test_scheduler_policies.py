@@ -83,11 +83,18 @@ def test_artifact_roundtrip(tmp_path):
     written = write_bench_artifact(
         path, kind="vision", config={"slots": 4},
         results={"balanced": {"images_s": 10.0}},
-        extra={"balanced_vs_naive": 1.5})
+        extra={"balanced_vs_naive": 1.5},
+        seed=7, trace_fingerprint="abc123")
     loaded = load_bench_artifact(path, expect_kind="vision")
     assert loaded == json.loads(json.dumps(written))
     assert loaded["schema_version"] == SCHEMA_VERSION
     assert loaded["balanced_vs_naive"] == 1.5
+    # v3 provenance block: seed + fingerprint as passed, git_sha captured
+    # from the checkout (string or null, never absent)
+    prov = loaded["provenance"]
+    assert prov["seed"] == 7
+    assert prov["trace_fingerprint"] == "abc123"
+    assert "git_sha" in prov
 
 
 def test_artifact_rejects_reserved_extra(tmp_path):
@@ -110,3 +117,8 @@ def test_artifact_load_validates(tmp_path):
     (tmp_path / "w.json").write_text(json.dumps(wrong))
     with pytest.raises(ValueError, match="schema_version"):
         load_bench_artifact(str(tmp_path / "w.json"))
+    gutted = json.load(open(path))
+    gutted["provenance"] = {"seed": 0}   # missing git_sha / fingerprint
+    (tmp_path / "p.json").write_text(json.dumps(gutted))
+    with pytest.raises(ValueError, match="provenance"):
+        load_bench_artifact(str(tmp_path / "p.json"))
