@@ -130,15 +130,21 @@ def outputs_digest(out) -> str:
 
 def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
              bmode: str, planner: str, pipeline_depth: int = 1,
-             quality: str = "strict", keep_floor: float = 0.4):
+             quality: str = "strict", keep_floor: float = 0.4,
+             tracer=None, registry=None, metrics_prefix: str = "vision"):
     """Serve the stream twice (warmup compiles every shape on the identical
-    stream — arrival dynamics replay exactly) and time the second pass."""
+    stream — arrival dynamics replay exactly) and time the second pass.
+    ``tracer`` (repro.obs) records wall-clock plan/stage/dispatch/complete
+    spans; ``registry`` receives the engine's end-of-run metrics under
+    ``metrics_prefix``. Both observe only — results and digests are
+    identical with or without them."""
     from repro.serving import VisionEngine, VisionEngineConfig
 
     vc = VisionEngineConfig(max_batch=slots, mode=bmode, token_tile=1,
                             planner=planner, pipeline_depth=pipeline_depth,
                             quality=quality, keep_floor=keep_floor)
-    engine = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model)
+    engine = VisionEngine(cfg, masked, packed, vc, cost_model=cost_model,
+                          tracer=tracer)
     engine.serve(reqs_factory())
     warm = engine.stats()
     reqs = reqs_factory()
@@ -153,6 +159,8 @@ def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
     # wall_vs_device > 1 is host overhead the pipeline can hide
     busy = (st["pipeline_block_s"] - warm["pipeline_block_s"]
             + st["pipeline_dispatch_s"] - warm["pipeline_dispatch_s"])
+    if registry is not None:
+        engine.export_metrics(registry, prefix=metrics_prefix)
     return {
         "seconds": dt,
         "images_s": len(out) / dt,
@@ -181,7 +189,7 @@ def run_mode(cfg, masked, packed, cost_model, reqs_factory, *, slots: int,
 
 
 def quality_pareto(cfg, masked, packed, cost_model, reqs_factory, *,
-                   slots: int, planner: str):
+                   slots: int, planner: str, registry=None):
     """The quality-elasticity Pareto sweep: serve the identical stream at
     progressively tighter keep floors (``degrade`` mode pins every
     consenting request to the lowest usable grid level, so each arm IS one
@@ -239,6 +247,15 @@ def quality_pareto(cfg, masked, packed, cost_model, reqs_factory, *,
         top1 = {u: int(np.argmax(lg)) for u, lg in out.items()}
         if base_top1 is None:
             base_top1 = top1
+        if registry is not None:
+            # per-floor quality-tighten counters (schema-v4 metrics block)
+            pfx = f"pareto.floor_{floor:g}" if qmode != "strict" \
+                else "pareto.strict"
+            registry.gauge(f"{pfx}.tightened_steps").set(
+                st["quality_tightened"])
+            for lvl, n in sorted(q.level_counts.items()):
+                registry.gauge(
+                    f"{pfx}.quality_tightened_level_{lvl:g}").set(n)
         rows.append({
             "arm": name, "quality": qmode, "keep_floor": floor,
             "keep_levels": list(levels),
@@ -312,7 +329,8 @@ def pipeline_compare(cfg, masked, packed, cost_model, reqs_factory, *,
 def bench(arch: str, num: int, slots: int, arrival_spread: int,
           image_size: int, d_model: int, seed: int, planner: str,
           calibrate: bool, pipeline_depth: int = 1,
-          quality: str = "strict", keep_floor: float = 0.4):
+          quality: str = "strict", keep_floor: float = 0.4,
+          tracer=None, registry=None):
     import jax
 
     from repro.configs import get_config
@@ -352,11 +370,16 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
     for mode, bmode, pmode in (("naive", "naive", "off"),
                                ("balanced", "balanced", "off"),
                                ("planned", "balanced", planner)):
+        # the planned mixed arm is the bench's headline configuration —
+        # it is the one that carries the trace and the metrics snapshot
+        planned = mode == "planned"
         results["mixed"][mode] = run_mode(
             cfg, masked, packed, cost_model, mixed,
             slots=slots, bmode=bmode, planner=pmode,
             pipeline_depth=pipeline_depth,
-            quality=quality, keep_floor=keep_floor)
+            quality=quality, keep_floor=keep_floor,
+            tracer=tracer if planned else None,
+            registry=registry if planned else None)
     for mode, pmode in (("balanced", "off"), ("planned", planner)):
         results["sparse"][mode] = run_mode(
             cfg, masked, packed, cost_model, sparse,
@@ -368,7 +391,7 @@ def bench(arch: str, num: int, slots: int, arrival_spread: int,
         planner=planner)
     results["quality_pareto"] = quality_pareto(
         cfg, masked, packed, cost_model, pareto, slots=slots,
-        planner=planner)
+        planner=planner, registry=registry)
     return results, fit
 
 
@@ -404,6 +427,12 @@ def main():
                          "(no request is tightened below it)")
     ap.add_argument("--out", default="BENCH_vision.json",
                     help="JSON artifact path")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome trace_event JSON (Perfetto-"
+                         "loadable) of the planned mixed arm's plan/"
+                         "stage/dispatch/complete spans; tracing observes "
+                         "only — outputs_digest is identical with it on "
+                         "or off (CI asserts this)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run for the CI fast lane (skips "
                          "cost-model calibration and perf assertions)")
@@ -412,11 +441,18 @@ def main():
         args.requests, args.slots = 8, 4
         args.arrival_spread, args.image_size, args.d_model = 3, 32, 0
 
+    from repro.obs import MetricsRegistry, Tracer
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry()
     res, fit = bench(args.arch, args.requests, args.slots,
                      args.arrival_spread, args.image_size, args.d_model,
                      args.seed, args.planner, calibrate=not args.smoke,
                      pipeline_depth=args.pipeline_depth,
-                     quality=args.quality, keep_floor=args.keep_floor)
+                     quality=args.quality, keep_floor=args.keep_floor,
+                     tracer=tracer, registry=registry)
+    if args.trace_out:
+        tracer.write_chrome_trace(args.trace_out)
+        print(f"wrote {args.trace_out} ({tracer.event_count} trace events)")
     if fit:
         print(f"cost model calibrated: overhead="
               f"{fit['dispatch_overhead_cycles']:.0f} cycles "
@@ -490,14 +526,16 @@ def main():
     from repro.bench import write_bench_artifact
     write_bench_artifact(
         args.out, kind="vision",
-        config={k: v for k, v in vars(args).items() if k != "out"},
+        config={k: v for k, v in vars(args).items()
+                if k not in ("out", "trace_out")},
         results=res,
         extra={"balanced_vs_naive": bal_naive,
                "planned_vs_balanced_mixed": plan_mixed,
                "planned_vs_balanced_sparse": plan_sparse,
                "sparse_measured_saving_ms": measured_saving_ms,
                "calibration": fit},
-        seed=args.seed)
+        seed=args.seed,
+        metrics=registry.snapshot())
     print(f"wrote {args.out}")
     if not ok:
         print("FAIL: unserved requests, recompile budget exceeded, "

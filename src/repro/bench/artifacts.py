@@ -7,7 +7,7 @@ regression diffing, the nightly lane) see ONE envelope instead of
 per-script ad-hoc dicts:
 
     {
-      "schema_version": 3,
+      "schema_version": 4,
       "kind":    "<benchmark family, e.g. 'serving' | 'vision'>",
       "created_unix": <float epoch seconds>,
       "provenance": {           # what it takes to REPRODUCE the run
@@ -17,6 +17,8 @@ per-script ad-hoc dicts:
       },
       "config":  {...},         # the knobs the run was configured with
       "results": {...},         # per-mode measurements
+      "metrics": {...} | null,  # optional repro.obs MetricsRegistry
+                                # snapshot (name -> typed metric entry)
       ...extra top-level summary keys (speedups etc.)
     }
 
@@ -33,6 +35,13 @@ Version history:
       a bench row is only evidence if the run is reconstructible — which
       code, which RNG stream, and (for trace-replay benches) which exact
       workload. Fields are null when unknown; the block is always present.
+  4 — reserved optional ``metrics`` block: a ``repro.obs.MetricsRegistry``
+      snapshot (``{name: {"type": counter|gauge|histogram, ...}}``) taken
+      at the end of the run — recompile counts, planner modeled-vs-
+      measured cost error, quality-tighten counters, SLO histograms.
+      Null when the bench collected no metrics; the key is always
+      present. Purely observational: adding it must not change any
+      ``results`` value or digest.
 """
 from __future__ import annotations
 
@@ -41,10 +50,10 @@ import subprocess
 import time
 from typing import Any, Dict, Optional
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _RESERVED = ("schema_version", "kind", "created_unix", "provenance",
-             "config", "results")
+             "config", "results", "metrics")
 
 
 def git_sha() -> Optional[str]:
@@ -63,12 +72,15 @@ def write_bench_artifact(path: str, kind: str, config: Dict[str, Any],
                          results: Dict[str, Any],
                          extra: Optional[Dict[str, Any]] = None,
                          seed: Optional[int] = None,
-                         trace_fingerprint: Optional[str] = None
+                         trace_fingerprint: Optional[str] = None,
+                         metrics: Optional[Dict[str, Any]] = None
                          ) -> Dict[str, Any]:
     """Write the envelope to ``path``; returns the dict written. ``extra``
     keys land at the top level (summary scalars) and must not collide with
     the envelope's own fields. ``seed`` / ``trace_fingerprint`` fill the
-    provenance block (the git SHA is captured automatically)."""
+    provenance block (the git SHA is captured automatically). ``metrics``
+    is an optional ``repro.obs.MetricsRegistry.snapshot()`` dict (schema
+    v4); pass None when the bench collected none."""
     artifact: Dict[str, Any] = {
         "schema_version": SCHEMA_VERSION,
         "kind": kind,
@@ -80,6 +92,7 @@ def write_bench_artifact(path: str, kind: str, config: Dict[str, Any],
         },
         "config": config,
         "results": results,
+        "metrics": metrics,
     }
     for key, value in (extra or {}).items():
         if key in _RESERVED:

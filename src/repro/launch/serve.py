@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving import ElasticContext, EngineConfig, Request, ServeEngine
 
 
@@ -59,7 +60,8 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
           max_new: int = 16, kv_prune: float = 1.0, reduced: bool = True,
           max_batch: int = 4, seed: int = 0, continuous: bool = False,
           elastic_drop: int = 0, per_slot_prefill: bool = True,
-          policy: str = "fifo", pipeline_depth: int = 1):
+          policy: str = "fifo", pipeline_depth: int = 1,
+          trace_out: str = "", metrics_out: str = ""):
     if elastic_drop and not continuous:
         raise ValueError("--elastic-drop requires --continuous: only the "
                          "slot path probes device_count() between steps")
@@ -80,14 +82,19 @@ def serve(arch: str, num_requests: int = 8, prompt_len: int = 16,
                                         dtype=np.int32),
                     max_new_tokens=max_new)
             for i in range(num_requests)]
+    tracer = Tracer() if trace_out else None
     with tempfile.TemporaryDirectory(prefix="elastic_") as ckpt_dir:
         elastic = (simulated_loss_context(params, elastic_drop, ckpt_dir)
                    if elastic_drop else None)
         engine = ServeEngine(cfg, params, ec, elastic=elastic,
-                             policy=policy)
+                             policy=policy, tracer=tracer)
         t0 = time.time()
         out = engine.serve(reqs, continuous=continuous)
         dt = time.time() - t0
+    if trace_out:
+        tracer.write_chrome_trace(trace_out)
+    if metrics_out:
+        engine.export_metrics(MetricsRegistry()).write_json(metrics_out)
     total_tokens = sum(len(v) for v in out.values())
     return {"outputs": out, "seconds": dt,
             "tokens_per_s": total_tokens / dt,
@@ -119,6 +126,13 @@ def main():
                          "= synchronous stepping (the reference path), 2 "
                          "= stage step N+1 while the device executes "
                          "step N (bit-exact)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome trace_event JSON (Perfetto-"
+                         "loadable) of the run's plan/stage/dispatch/"
+                         "complete spans to PATH at exit")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the engine's metrics-registry snapshot "
+                         "(JSON) to PATH at exit")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
@@ -126,7 +140,8 @@ def main():
                 args.kv_prune, args.reduced, max_batch=args.max_batch,
                 continuous=args.continuous, elastic_drop=args.elastic_drop,
                 per_slot_prefill=not args.no_slot_prefill,
-                policy=args.policy, pipeline_depth=args.pipeline_depth)
+                policy=args.policy, pipeline_depth=args.pipeline_depth,
+                trace_out=args.trace_out, metrics_out=args.metrics_out)
     if args.json:
         print(json.dumps({
             "outputs": {str(k): v for k, v in out["outputs"].items()},

@@ -28,6 +28,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import model as M
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving import (EngineConfig, ServeEngine, VisionEngine,
                            VisionEngineConfig)
 from repro.traffic import (ARRIVAL_PROCESSES, LMDriver, TraceSpec,
@@ -106,6 +107,16 @@ def main():
                          "controller (0 = unbounded admission)")
     ap.add_argument("--per-token-ms", type=float, default=1.0,
                     help="lm virtual-clock price per dispatched token")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome trace_event JSON (Perfetto-"
+                         "loadable) of the replay's per-step and "
+                         "per-request timelines — VIRTUAL-clock "
+                         "timestamps, deterministic and identical at "
+                         "every --pipeline-depth")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the replay's metrics-registry snapshot "
+                         "(latency/ttfd histograms, admission and "
+                         "scheduler counters) to PATH")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -122,10 +133,17 @@ def main():
     driver = build_driver(args.engine, args.arch, args.slots, args.seed,
                           args.pipeline_depth, args.quality,
                           args.keep_floor, args.per_token_ms)
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
     harness = TrafficHarness(
-        driver, admission_limit_ms=args.admission_limit_ms or None)
+        driver, admission_limit_ms=args.admission_limit_ms or None,
+        tracer=tracer, metrics=metrics)
     report = harness.run(trace)
     report["trace_fingerprint"] = trace_fingerprint(trace)
+    if args.trace_out:
+        tracer.write_chrome_trace(args.trace_out)
+    if args.metrics_out:
+        metrics.write_json(args.metrics_out)
 
     if args.json:
         print(json.dumps(report, default=str))

@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import model as M
 from repro.models import pruning_glue as PG
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving import (PLANNER_MODES, VisionEngine, VisionEngineConfig,
                            VisionRequest)
 
@@ -91,7 +92,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
           arrival_spread: int = 4, seed: int = 0,
           planner: str = "full", deadline_ms: float = 0.0,
           pipeline_depth: int = 1, quality: str = "strict",
-          keep_floor: float = 0.4):
+          keep_floor: float = 0.4, trace_out: str = "",
+          metrics_out: str = ""):
     cfg = get_config(arch).reduced()
     if image_size:
         cfg = cfg.replace(image_size=image_size)
@@ -104,13 +106,18 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
                             token_tile=token_tile, planner=planner,
                             pipeline_depth=pipeline_depth,
                             quality=quality, keep_floor=keep_floor)
+    tracer = Tracer() if trace_out else None
     engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
-                                      policy=policy)
+                                      policy=policy, tracer=tracer)
     reqs = make_requests(cfg, num_requests, arrival_spread, seed,
                          deadline_ms=deadline_ms or None)
     t0 = time.time()
     out = engine.serve(reqs)
     dt = time.time() - t0
+    if trace_out:
+        tracer.write_chrome_trace(trace_out)
+    if metrics_out:
+        engine.export_metrics(MetricsRegistry()).write_json(metrics_out)
     return {"outputs": out, "seconds": dt,
             "images_per_s": len(out) / dt,
             "events": list(engine.events),
@@ -155,6 +162,13 @@ def main():
     ap.add_argument("--keep-floor", type=float, default=0.4,
                     help="controller keep-rate floor: no request is ever "
                          "tightened below this, whatever the load")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome trace_event JSON (Perfetto-"
+                         "loadable) of the run's plan/stage/dispatch/"
+                         "complete spans to PATH at exit")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the engine's metrics-registry snapshot "
+                         "(JSON) to PATH at exit")
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable result line")
     args = ap.parse_args()
@@ -162,7 +176,8 @@ def main():
                 args.token_tile, args.policy, args.image_size,
                 args.arrival_spread, args.seed, args.planner,
                 args.deadline_ms, args.pipeline_depth, args.quality,
-                args.keep_floor)
+                args.keep_floor, trace_out=args.trace_out,
+                metrics_out=args.metrics_out)
     if args.json:
         print(json.dumps({
             "top1": {str(u): int(np.argmax(lg))

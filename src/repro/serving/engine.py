@@ -78,6 +78,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.dist.elastic import MeshPlan, degradation_path, first_fit
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.cache_manager import KVCacheManager, prune_kv_caches
 from repro.serving.pipeline import StagedStep, StepPipeline, StepReport
 from repro.serving.runner import ModelRunner, build_padded_batch
@@ -165,14 +167,19 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, ec: EngineConfig,
                  elastic: Optional[ElasticContext] = None,
-                 policy: "str | Callable" = "fifo"):
+                 policy: "str | Callable" = "fifo",
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.ec = ec
         self.elastic = elastic
         self.runner = ModelRunner(cfg, params)
         self.cache = KVCacheManager(cfg, ec)
         self.scheduler = Scheduler(ec.max_batch, policy=policy)
-        self.pipeline = StepPipeline(ec.pipeline_depth)
+        # wall-clock span tracer (repro.obs): plan/stage spans here, the
+        # pipeline adds dispatch/complete; disabled default costs one
+        # attribute check per guarded region
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.pipeline = StepPipeline(ec.pipeline_depth, tracer=self.tracer)
         self._plan = elastic.plan if elastic is not None else None
         # padded tokens run through prefill at admissions (and rebuilds)
         self.admission_prefill_tokens = 0
@@ -194,7 +201,10 @@ class ServeEngine:
         self.runner.params = value
 
     @property
-    def events(self) -> List[Tuple[str, Any]]:
+    def events(self):
+        """The Scheduler's unified event stream (a bounded
+        ``repro.obs.events.EventLog`` ring; iterate or slice with
+        absolute indices)."""
         return self.scheduler.events
 
     @property
@@ -233,6 +243,15 @@ class ServeEngine:
             **{f"sched_{k}": v for k, v in self.scheduler.stats().items()},
             **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
         }
+
+    def export_metrics(self, registry: MetricsRegistry,
+                       prefix: str = "lm") -> MetricsRegistry:
+        """Fold this engine's observable state into ``registry``: every
+        numeric ``stats()`` entry (compile ledger, prefill amortization,
+        KV prunes, scheduler backlog, pipeline overlap/starvation) as a
+        ``<prefix>.<key>`` gauge."""
+        registry.absorb(prefix, self.stats())
+        return registry
 
     def _annotate_prune_load(self, requests: List[Request]) -> None:
         """Predicted post-prune token load for the prune_pressure_aware
@@ -349,13 +368,23 @@ class ServeEngine:
         sched_mark = sum(self._scheduled.values())
         staged: Optional[StagedStep] = None
         admitted: List[Tuple[int, Request]] = []
+        tr = self.tracer
         while True:
             sub_mark = sched.submitted_total
+            if tr.enabled:
+                tr.begin("plan", track="engine")
             admitted.extend(sched.schedule())
+            if tr.enabled:
+                tr.end("plan", track="engine")
             if self._rebuild or (admitted and not use_slot):
                 break  # sync fallback below; nothing staged to drop
+            if tr.enabled:
+                tr.begin("stage", track="engine",
+                         admissions=len(admitted))
             staged = (self._stage_admissions(admitted, out)
                       if admitted else self._stage_decode(out))
+            if tr.enabled:
+                tr.end("stage", track="engine")
             if sched.submitted_total == sub_mark:
                 break
             # submitted while staging: drop + restage so the request

@@ -42,6 +42,8 @@ from typing import Any, Callable, Deque, Dict, Optional
 
 import jax
 
+from repro.obs.trace import NULL_TRACER, Tracer
+
 __all__ = ["StagedStep", "StepPipeline", "StepReport"]
 
 
@@ -96,6 +98,14 @@ class StagedStep:
     handles: Any = None
     dispatched: bool = False
     completed: bool = False
+    modeled_ms: float = 0.0   # the cost model's price of this step (vision
+    # engines set it from the staged ExecutionPlan; 0 = unmodeled). Paired
+    # with the measured dispatch+block wall time at completion, this is
+    # the per-step modeled-vs-measured sample behind the calibration-drift
+    # metric (pipeline stats: modeled_ms_total / measured_ms_total).
+    dispatch_wall_s: float = 0.0  # wall seconds this step's dispatch took
+    # (pipeline-recorded; the complete phase adds its block time to form
+    # the measured cost)
 
 
 class StepPipeline:
@@ -108,10 +118,14 @@ class StepPipeline:
     stages the next.
     """
 
-    def __init__(self, depth: int = 1):
+    def __init__(self, depth: int = 1, tracer: Optional[Tracer] = None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.depth = depth
+        # wall-clock span tracer (repro.obs): dispatch/complete spans on
+        # the "pipeline" track. Disabled by default — one attribute check
+        # per phase; it observes timing only, never reorders work
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._inflight: Deque[StagedStep] = deque()
         # accounting (the bench's wall_vs_device column reads these)
         self.steps = 0           # steps dispatched
@@ -121,6 +135,11 @@ class StepPipeline:
         #                          host was staging (overlap realized)
         self.block_s = 0.0       # wall seconds inside block_until_ready
         self.dispatch_s = 0.0    # wall seconds enqueueing device work
+        self.modeled_ms_total = 0.0   # sum of completed steps' cost-model
+        #                               prices (steps with modeled_ms > 0)
+        self.measured_ms_total = 0.0  # their measured dispatch+block wall
+        #                               ms — modeled vs measured is the
+        #                               calibration-drift signal
         self.starved_s = 0.0     # wall seconds the device spent with NO
         #                          step in flight — the host was planning/
         #                          staging while the device sat idle. This
@@ -135,14 +154,20 @@ class StepPipeline:
     def submit(self, step: StagedStep) -> None:
         """Dispatch ``step`` and drain completions down to ``depth - 1``
         in-flight steps."""
+        tr = self.tracer
         t0 = time.perf_counter()
         if not self._inflight:
             # the device queue was empty for the whole host-side gap since
             # it last drained — that gap is device starvation
             self.starved_s += t0 - self._idle_since
+        if tr.enabled:
+            tr.begin("dispatch", track="pipeline", label=step.label)
         step.handles = step.dispatch()
         step.dispatched = True
-        self.dispatch_s += time.perf_counter() - t0
+        if tr.enabled:
+            tr.end("dispatch", track="pipeline")
+        step.dispatch_wall_s = time.perf_counter() - t0
+        self.dispatch_s += step.dispatch_wall_s
         self.steps += 1
         self._inflight.append(step)
         while len(self._inflight) > self.depth - 1:
@@ -167,15 +192,27 @@ class StepPipeline:
 
     def _complete_oldest(self) -> None:
         step = self._inflight.popleft()
+        tr = self.tracer
         leaves = jax.tree_util.tree_leaves(step.handles)
         if leaves and all(l.is_ready() for l in leaves
                           if hasattr(l, "is_ready")):
             self.overlap_hits += 1
+        if tr.enabled:
+            tr.begin("complete", track="pipeline", label=step.label)
         t0 = time.perf_counter()
         jax.block_until_ready(step.handles)
-        self.block_s += time.perf_counter() - t0
+        block = time.perf_counter() - t0
+        self.block_s += block
         step.complete(step.handles)
         step.completed = True
+        if tr.enabled:
+            tr.end("complete", track="pipeline")
+        if step.modeled_ms > 0.0:
+            # dispatch wall + block wall brackets the device's work for
+            # this step (exactly the bench's device-busy proxy), measured
+            # per step so drift against the cost model is attributable
+            self.modeled_ms_total += step.modeled_ms
+            self.measured_ms_total += (step.dispatch_wall_s + block) * 1e3
         if not self._inflight:
             self._idle_since = time.perf_counter()
 
@@ -193,4 +230,12 @@ class StepPipeline:
             "block_s": self.block_s,
             "dispatch_s": self.dispatch_s,
             "starved_s": self.starved_s,
+            "modeled_ms_total": self.modeled_ms_total,
+            "measured_ms_total": self.measured_ms_total,
+            # signed relative drift of the cost model against measured
+            # wall time ((modeled - measured) / measured): the closed-loop
+            # adaptation signal; 0.0 until a modeled step completes
+            "cost_error": ((self.modeled_ms_total - self.measured_ms_total)
+                           / self.measured_ms_total
+                           if self.measured_ms_total > 0.0 else 0.0),
         }

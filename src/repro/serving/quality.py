@@ -115,6 +115,9 @@ class QualityController:
         self.tightened = 0
         self.deadline_tightened = 0
         self.levels_used: Set[float] = set()
+        # tighten events per resolved keep level (the per-level counter
+        # the obs metrics registry exports)
+        self.level_counts: Dict[float, int] = {}
 
     @property
     def enabled(self) -> bool:
@@ -205,7 +208,10 @@ class QualityController:
         self.decisions += decisions
         self.tightened += tightened
         self.deadline_tightened += deadline_tightened
-        self.levels_used.update(float(l) for l in levels)
+        for l in levels:
+            lv = float(l)
+            self.levels_used.add(lv)
+            self.level_counts[lv] = self.level_counts.get(lv, 0) + 1
 
     def stats(self) -> Dict[str, Any]:
         return {
@@ -216,4 +222,5 @@ class QualityController:
             "tightened": self.tightened,
             "deadline_tightened": self.deadline_tightened,
             "levels_used": tuple(sorted(self.levels_used)),
+            "level_counts": tuple(sorted(self.level_counts.items())),
         }

@@ -53,6 +53,8 @@ from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
                     Tuple)
 
+from repro.obs.events import EventLog
+
 # Request lives in engine.py / vision.py (public API compat); import lazily
 # to avoid a cycle — the annotation below is intentionally loose.
 Request = Any
@@ -104,7 +106,7 @@ class Scheduler:
 
     def __init__(self, num_slots: int, policy: "str | PolicyFn" = "fifo",
                  admission_control: Optional[Callable[[Request], bool]]
-                 = None):
+                 = None, event_capacity: int = 65536):
         if num_slots <= 0:
             raise ValueError(f"num_slots must be positive, got {num_slots}")
         self.num_slots = num_slots
@@ -119,7 +121,11 @@ class Scheduler:
         self.admission_control = admission_control
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}   # slot -> request
-        self.events: List[Tuple[str, Any]] = []
+        # bounded ring: len() is the absolute sequence length and slices
+        # take absolute indices, so incremental consumers (the traffic
+        # harness's events[mark:] scan) are eviction-safe; drain() hands
+        # the buffered window to exporters
+        self.events = EventLog(capacity=event_capacity)
         # monotone submission counter: the pipelined engines snapshot it
         # when they stage a step and compare before dispatch — a request
         # submitted while a plan is in flight lands in the NEXT plan
@@ -127,6 +133,8 @@ class Scheduler:
         # staged, and is never silently deferred past a step boundary
         self.submitted_total = 0
         self.rejected_total = 0
+        self.admitted_total = 0
+        self.retired_total = 0
         self.peak_queue_depth = 0
 
     # -- request lifecycle -------------------------------------------------
@@ -162,6 +170,7 @@ class Scheduler:
             del self.waiting[idx]
             self.running[slot] = req
             self.events.append(("admit", req.uid))
+            self.admitted_total += 1
             admitted.append((slot, req))
         return admitted
 
@@ -169,6 +178,7 @@ class Scheduler:
         """Free ``slot``; emits a ``retire`` event for its request."""
         req = self.running.pop(slot)
         self.events.append(("retire", req.uid))
+        self.retired_total += 1
         return req
 
     # -- observability -----------------------------------------------------
@@ -177,16 +187,23 @@ class Scheduler:
         into the same stream as admit/retire."""
         self.events.append((kind, payload))
 
+    def drain_events(self) -> List[Tuple[str, Any]]:
+        """Consume the buffered event window (see ``EventLog.drain``:
+        counters and absolute marks stay valid)."""
+        return self.events.drain()
+
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
     @property
     def num_admissions(self) -> int:
-        return sum(1 for e in self.events if e[0] == "admit")
+        # counter-backed (NOT an event scan: the ring may have evicted
+        # old admit events on a long-lived engine)
+        return self.admitted_total
 
     @property
     def num_retirements(self) -> int:
-        return sum(1 for e in self.events if e[0] == "retire")
+        return self.retired_total
 
     @property
     def queue_depth(self) -> int:
@@ -207,6 +224,7 @@ class Scheduler:
             "num_slots": self.num_slots,
             "submitted_total": self.submitted_total,
             "rejected_total": self.rejected_total,
-            "admitted_total": self.num_admissions,
-            "retired_total": self.num_retirements,
+            "admitted_total": self.admitted_total,
+            "retired_total": self.retired_total,
+            "events_dropped": self.events.dropped,
         }

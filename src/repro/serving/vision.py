@@ -48,6 +48,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packed_runner as PR
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
                                    TilePlanner)
 from repro.serving.pipeline import StagedStep, StepPipeline, StepReport
@@ -167,7 +169,8 @@ class VisionEngine:
     def __init__(self, cfg: ModelConfig, params: Dict, packed: Dict,
                  vc: Optional[VisionEngineConfig] = None,
                  policy: "str | Callable" = "fifo",
-                 cost_model: Optional[TileCostModel] = None):
+                 cost_model: Optional[TileCostModel] = None,
+                 tracer: Optional[Tracer] = None):
         if cfg.family != "vit":
             raise ValueError(f"VisionEngine serves the 'vit' family, "
                              f"got {cfg.family!r}")
@@ -194,7 +197,14 @@ class VisionEngine:
         # arrival_step is relative to the serve() call that submitted it,
         # so identical request streams replay identically (warmup == run)
         self._pending: List[Any] = []
-        self.pipeline = StepPipeline(self.vc.pipeline_depth)
+        # wall-clock span tracer (repro.obs): plan/stage spans here, the
+        # pipeline adds dispatch/complete. NULL_TRACER default = one
+        # attribute check per guarded region; traces observe wall time
+        # only and never perturb the dispatched math (CI asserts digest
+        # equality traced vs untraced)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.pipeline = StepPipeline(self.vc.pipeline_depth,
+                                     tracer=self.tracer)
         # speculative next-step plan from plan_ahead: (population
         # fingerprint it is valid for, plan). Consumed on fingerprint
         # match; dropped (and replanned) when admissions/retirements made
@@ -222,13 +232,15 @@ class VisionEngine:
     @classmethod
     def from_pruned(cls, cfg: ModelConfig, params: Dict, scores: Dict,
                     vc: Optional[VisionEngineConfig] = None,
-                    policy: "str | Callable" = "fifo") -> "VisionEngine":
+                    policy: "str | Callable" = "fifo",
+                    tracer: Optional[Tracer] = None) -> "VisionEngine":
         """Harden the pruning and build the engine: masks the dense params
         (the DBMM path) and SBMM-packs the attention weights."""
         from repro.models import pruning_glue as PG
         masked = PG.apply_pruning(cfg, params, scores)
         packed = PR.pack_model(cfg, params, scores)
-        return cls(cfg, masked, packed, vc=vc, policy=policy)
+        return cls(cfg, masked, packed, vc=vc, policy=policy,
+                   tracer=tracer)
 
     # -- events / compat ---------------------------------------------------
     @property
@@ -390,6 +402,23 @@ class VisionEngine:
             **{f"quality_{k}": v
                for k, v in self.planner.quality.stats().items()},
         }
+
+    def export_metrics(self, registry: MetricsRegistry,
+                       prefix: str = "vision") -> MetricsRegistry:
+        """Fold this engine's observable state into ``registry``: every
+        numeric ``stats()`` entry as a ``<prefix>.<key>`` gauge (compile
+        ledgers, planner merge/fuse/deadline counters, padding waste,
+        device idle, backlog), plus the signals the flat dicts cannot
+        carry — the modeled-vs-measured plan cost error (calibration
+        drift) and the quality controller's tighten count per keep
+        level."""
+        registry.absorb(prefix, self.stats())
+        p = self.pipeline.stats()
+        registry.gauge(f"{prefix}.plan_cost_error").set(p["cost_error"])
+        for lvl, n in sorted(self.planner.quality.level_counts.items()):
+            registry.gauge(
+                f"{prefix}.quality_tightened_level_{lvl:g}").set(n)
+        return registry
 
     # -- engine internals --------------------------------------------------
     def _validate(self, r: VisionRequest) -> None:
@@ -605,12 +634,18 @@ class VisionEngine:
         logits independent of pipeline depth."""
         slots = sorted(self._live)
         now = time.monotonic()
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("plan", track="engine", step=self.steps,
+                     population=len(slots))
         # quality resolution happens ONCE per staging pass, before planning:
         # the effective schedules shape the trajectories the planner prices,
         # so the plan, the stage keys and the dispatched k values all agree
         eff = {s: self._resolve_schedule(self._live[s], now) for s in slots}
         items = [self._plan_item(self._live[s], now, eff[s]) for s in slots]
         plan = self._next_plan(items)
+        if tr.enabled:
+            tr.end("plan", track="engine")
         n_urgent = plan.urgent_tile_count()
         n_segs = len(self.segments.plan)
 
@@ -638,6 +673,9 @@ class VisionEngine:
                     q_dl += sum(1 for a, b in zip(e0[done:], eff[s][done:])
                                 if b < a - 1e-12)
 
+        if tr.enabled:
+            tr.begin("stage", track="engine", step=self.steps,
+                     tiles=len(plan.tiles), lanes=len(plan.lanes))
         tile_runs = []
         for tile in plan.tiles:
             member_slots = [slots[i] for i in tile.members]
@@ -689,6 +727,8 @@ class VisionEngine:
             lane_runs.append((slot, steps, jnp.asarray(st.x,
                                                        jnp.float32)[None],
                               seed))
+        if tr.enabled:
+            tr.end("stage", track="engine")
 
         produced: List[Any] = []  # (req, y handle, row) head/lane outputs
 
@@ -746,7 +786,9 @@ class VisionEngine:
                 out[req.uid] = req.logits
 
         return StagedStep(dispatch=dispatch, complete=complete,
-                          label=f"vit-step-{self.steps}")
+                          label=f"vit-step-{self.steps}",
+                          modeled_ms=self.planner.cost_model.ms(
+                              plan.stats.modeled_cycles))
 
     def _retire_finished(self) -> None:
         """Free slots whose trajectory completed. Host-deterministic given

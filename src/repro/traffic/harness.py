@@ -40,6 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.traffic.admission import AdmissionController
 from repro.traffic.workload import Trace, TraceRequest
 
@@ -236,10 +238,30 @@ class TrafficHarness:
     replay; pass ``controller`` instead to install a pre-built one. With
     neither, admission is unbounded — the pre-PR behavior, byte-for-byte
     (``outputs_digest`` equality with a direct ``serve()`` call on the
-    same requests is tested)."""
+    same requests is tested).
+
+    ``tracer`` (optional, ``repro.obs``) makes the replay emit
+    virtual-clock spans: per dispatched step, nested
+    ``plan``/``stage``/``dispatch``/``complete`` spans keyed by the
+    :class:`StepReport` on a shared ``steps`` track (host work is free on
+    the virtual clock, so plan/stage are zero-width and dispatch spans
+    the step's modeled price), and — after the replay — one lifecycle
+    track per request (``enqueue``/``queued``/``serve`` spans, rejects as
+    instants) stitched from the same records the report is built from.
+    Every timestamp is virtual, so the exported Chrome trace is
+    byte-identical at any pipeline depth (tests assert this).
+
+    ``metrics`` (optional) records the SLO distributions into
+    fixed-bucket histograms (``traffic.latency_ms`` / ``traffic.ttfd_ms``
+    / ``traffic.queue_depth`` — their snapshot p50/p95/p99 are histogram
+    reads of the same data the report's exact nearest-rank percentiles
+    summarize) plus offered/completed/rejected counters and the
+    admission/scheduler stats."""
 
     def __init__(self, driver, admission_limit_ms: Optional[float] = None,
-                 controller: Optional[AdmissionController] = None):
+                 controller: Optional[AdmissionController] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if admission_limit_ms is not None and controller is not None:
             raise ValueError("pass admission_limit_ms or controller, "
                              "not both")
@@ -249,6 +271,8 @@ class TrafficHarness:
             self.controller = driver.make_admission(admission_limit_ms)
         if self.controller is not None:
             self.controller.install(driver.scheduler)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
         self.records: Dict[int, RequestRecord] = {}
         self.outputs: Dict[int, Any] = {}
         self.queue_depth_samples: List[int] = []
@@ -293,14 +317,101 @@ class TrafficHarness:
             if report.dispatched:
                 for uid in report.admitted:
                     self.records[uid].first_dispatch_ms = now
-                now += drv.price_ms(report)
+                price = drv.price_ms(report)
+                if self.tracer.enabled:
+                    self._trace_step(len(self.queue_depth_samples), now,
+                                     price, report)
+                now += price
                 for uid in report.completed:
                     self.records[uid].retire_ms = now
                 self.queue_depth_samples.append(sched.queue_depth)
         drv.finish()
         self.outputs = out
         self.virtual_ms = now
+        if self.tracer.enabled:
+            self._trace_lifecycles()
+        if self.metrics is not None:
+            self._record_metrics()
         return self.report(trace)
+
+    # -- observability export ----------------------------------------------
+    def _trace_step(self, idx: int, t0: float, price_ms: float,
+                    report: Any) -> None:
+        """One dispatched step's virtual-clock spans. Host-side phases are
+        free on the virtual clock by construction (only modeled device
+        cost advances it), so ``plan``/``stage`` are zero-width markers at
+        the step start, ``dispatch`` spans the modeled price, and
+        ``complete`` closes at the step end — all nested in a ``step``
+        span carrying the StepReport facts."""
+        tr = self.tracer
+        t1 = t0 + price_ms
+        tr.begin("step", track="steps", t_ms=t0, step=idx,
+                 modeled_ms=price_ms, admitted=list(report.admitted),
+                 completed=list(report.completed))
+        tr.begin("plan", track="steps", t_ms=t0)
+        tr.end("plan", track="steps", t_ms=t0)
+        tr.begin("stage", track="steps", t_ms=t0)
+        tr.end("stage", track="steps", t_ms=t0)
+        tr.begin("dispatch", track="steps", t_ms=t0)
+        tr.end("dispatch", track="steps", t_ms=t1)
+        tr.begin("complete", track="steps", t_ms=t1)
+        tr.end("complete", track="steps", t_ms=t1)
+        tr.end("step", track="steps", t_ms=t1)
+
+    def _trace_lifecycles(self) -> None:
+        """Per-request lifecycle spans on per-uid tracks, from the same
+        records the report reads (themselves stitched from the
+        Scheduler's unified event stream via the StepReports):
+        ``enqueue`` (arrival -> handed to the engine), ``queued`` (waiting
+        for a slot), ``serve`` (first dispatch -> retire); rejected
+        requests get a ``reject`` instant. Unfinished phases (still-open
+        requests) emit nothing — the trace stays balanced."""
+        tr = self.tracer
+        for r in sorted(self.records.values(), key=lambda r: r.uid):
+            track = f"req {r.uid}"
+            if r.rejected:
+                tr.instant("reject", track=track, uid=r.uid,
+                           t_ms=(r.submit_ms if r.submit_ms is not None
+                                 else r.arrival_ms))
+                continue
+            if r.submit_ms is not None:
+                tr.begin("enqueue", track=track, t_ms=r.arrival_ms,
+                         uid=r.uid, deadline_ms=r.deadline_ms)
+                tr.end("enqueue", track=track, t_ms=r.submit_ms)
+                if r.first_dispatch_ms is not None:
+                    tr.begin("queued", track=track, t_ms=r.submit_ms)
+                    tr.end("queued", track=track, t_ms=r.first_dispatch_ms)
+            if r.first_dispatch_ms is not None and r.retire_ms is not None:
+                tr.begin("serve", track=track, t_ms=r.first_dispatch_ms,
+                         uid=r.uid, latency_ms=r.latency_ms,
+                         deadline_met=r.deadline_met)
+                tr.end("serve", track=track, t_ms=r.retire_ms)
+
+    def _record_metrics(self) -> None:
+        """Fold the replay's SLO data into the metrics registry (called
+        once, at the end of :meth:`run`)."""
+        mx = self.metrics
+        lat = mx.histogram("traffic.latency_ms")
+        ttfd = mx.histogram("traffic.ttfd_ms")
+        for r in self.records.values():
+            if r.rejected:
+                mx.counter("traffic.rejected").inc()
+                continue
+            if r.ttfd_ms is not None:
+                ttfd.record(r.ttfd_ms)
+            if r.latency_ms is not None:
+                lat.record(r.latency_ms)
+                mx.counter("traffic.completed").inc()
+                if r.deadline_met is False:
+                    mx.counter("traffic.deadline_missed").inc()
+        qd = mx.histogram("traffic.queue_depth",
+                          buckets=tuple(float(d) for d in range(65)))
+        for d in self.queue_depth_samples:
+            qd.record(d)
+        mx.counter("traffic.offered").inc(len(self.records))
+        mx.absorb("traffic.sched", self.driver.scheduler.stats())
+        if self.controller is not None:
+            mx.absorb("traffic.admission", self.controller.stats())
 
     # -- reporting ---------------------------------------------------------
     def report(self, trace: Trace) -> Dict[str, Any]:
