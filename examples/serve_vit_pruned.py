@@ -137,6 +137,51 @@ def main():
         assert exact, "the controller changes WHICH schedule runs, " \
                       "never the math"
 
+    # --- 5. quantized serving (int8 tier) ---------------------------------
+    # The same stream once more through an int8 engine: the planner prices
+    # every request's trajectory at fp32 AND int8 with the accelerator
+    # cycle model and dispatches the dequant-in-kernel SBMM variant when
+    # the tier is strictly cheaper. quality='strict' requests are pinned
+    # to fp32 — their logits are bit-exact with the fp32 engine's — and
+    # every quantized request is still bit-exact against the offline
+    # forward run at the SAME precision (quantization changes the weights
+    # once, offline; serving never changes the math).
+    print("\nquantized re-serve (precision=int8, per-channel scales):")
+    zreqs = [VisionRequest(
+        uid=i, patches=r.patches.copy(), r_t=r.r_t,
+        arrival_step=r.arrival_step) for i, r in enumerate(reqs)]
+    zreqs[1].quality = "strict"     # accuracy-critical: stays fp32
+    zeng = VisionEngine(cfg, masked, packed,
+                        VisionEngineConfig(max_batch=3, planner="full",
+                                           precision="int8"),
+                        policy="prune_pressure_aware")
+    zout = zeng.serve(zreqs)
+    zst = zeng.stats()
+    rep = zeng.quantization_report()
+    print(f"packed model {rep['packed_bytes_fp32']} -> "
+          f"{rep['packed_bytes']} bytes, max|dW|="
+          f"{rep['quant_max_abs_error']:.5f}; dispatches "
+          f"fp32={zst['dispatch_fp32']} int8={zst['dispatch_int8']} "
+          f"(dequant kernels {zst['dequant_dispatches']}), jit compiles "
+          f"{zst['jit_compile_count']} <= {zst['compile_budget']}")
+    agree = 0
+    for r in zreqs:
+        c = cfg if r.r_t is None else cfg.replace(
+            pruning=dataclasses.replace(cfg.pruning, r_t=r.r_t))
+        prec = "fp32" if r.quality == "strict" else "int8"
+        ref = PR.forward_vit_packed(c, masked, packed, r.patches[None],
+                                    segments=zeng.segments, precision=prec)
+        exact = np.array_equal(np.asarray(ref.logits[0]), zout[r.uid])
+        top1 = int(np.argmax(zout[r.uid]))
+        agree += top1 == int(np.argmax(out[r.uid]))
+        tag = "strict/fp32" if r.quality == "strict" else "int8"
+        print(f"  uid {r.uid} ({tag:11s}): top-1 {top1}, bit-exact vs "
+              f"offline at {prec}: {exact}")
+        assert exact, "quantized serving must match the quantized oracle"
+    assert np.array_equal(zout[1], out[1]), \
+        "a strict request on the int8 engine must be bit-exact fp32"
+    print(f"top-1 agreement vs the fp32 serve: {agree}/{len(zreqs)}")
+
 
 if __name__ == "__main__":
     main()

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packing
+from repro.core import quant as Q
 from repro.core import token_pruning as TP
 from repro.kernels.sbmm import sbmm
 from repro.models import attention as A
@@ -177,11 +178,19 @@ def _proj(params: Dict, packed: Dict, i: int, name: str, inp: jax.Array
 
 def _encoder_attn(cfg: ModelConfig, params: Dict, packed: Dict,
                   x: jax.Array, i: int, *, collect_scores: bool = False,
-                  n_valid: Optional[jax.Array] = None
+                  n_valid: Optional[jax.Array] = None,
+                  precision: str = "fp32"
                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Attention sublayer + residual of encoder layer ``i`` (projections
     through SBMM when packed). ``n_valid`` masks token padding out of the
-    attention and of the TDM scoring; padded rows' scores are exactly 0."""
+    attention and of the TDM scoring; padded rows' scores are exactly 0.
+
+    ``precision`` is the quantized-serving knob: weight precision is
+    carried by the ``packed`` dict itself (int8/fp16 entries dispatch the
+    matching SBMM kernel), while ``"fp16"`` additionally quantizes the
+    attention operands — q/k/v cast to float16 before the online-softmax
+    attention (whose accumulation stays fp32) — with the output and TDM
+    scores returned in fp32 so residuals and top-k run full-precision."""
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     lp = params["layers"][i]
     h = L.layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
@@ -192,11 +201,16 @@ def _encoder_attn(cfg: ModelConfig, params: Dict, packed: Dict,
          + lp["attn"].get("bk", 0.0)).reshape(Bc, Nc, KV, Dh)
     v = (_proj(params, packed, i, "wv", h)
          + lp["attn"].get("bv", 0.0)).reshape(Bc, Nc, KV, Dh)
+    if precision == "fp16":
+        q = q.astype(jnp.float16)
+        k = k.astype(jnp.float16)
+        v = v.astype(jnp.float16)
     o = A.flash_attention_jnp(q, k, v, causal=False, kv_len=n_valid)
+    o = o.astype(x.dtype)
     scores = None
     if collect_scores:
         probs = A.attention_probs_row(q[:, 0], k, kv_len=n_valid)
-        scores = probs.mean(axis=1)
+        scores = probs.mean(axis=1).astype(x.dtype)
     o = o.reshape(Bc, Nc, H * Dh)
     attn_out = _proj(params, packed, i, "wo", o) + lp["attn"].get("bo", 0.0)
     return x + attn_out, scores
@@ -225,10 +239,12 @@ def vit_embed(cfg: ModelConfig, params: Dict,
 
 def vit_layers(cfg: ModelConfig, params: Dict, packed: Dict, x: jax.Array,
                lo: int, hi: int,
-               n_valid: Optional[jax.Array] = None) -> jax.Array:
+               n_valid: Optional[jax.Array] = None,
+               precision: str = "fp32") -> jax.Array:
     """Encoder layers [lo, hi) at constant token count."""
     for i in range(lo, hi):
-        x, _ = _encoder_attn(cfg, params, packed, x, i, n_valid=n_valid)
+        x, _ = _encoder_attn(cfg, params, packed, x, i, n_valid=n_valid,
+                             precision=precision)
         x = _encoder_mlp(cfg, params, x, i)
     return x
 
@@ -236,7 +252,8 @@ def vit_layers(cfg: ModelConfig, params: Dict, packed: Dict, x: jax.Array,
 def vit_tdm_layer(cfg: ModelConfig, params: Dict, packed: Dict,
                   x: jax.Array, layer: int, r_t: Optional[float] = None,
                   k: Optional[int] = None,
-                  n_valid: Optional[jax.Array] = None) -> jax.Array:
+                  n_valid: Optional[jax.Array] = None,
+                  precision: str = "fp32") -> jax.Array:
     """Encoder layer ``layer`` with the TDM between its attention and MLP
     sublayers: [B, N, D] -> [B, k + 2, D] (CLS + k kept + fused). ``k``
     must be passed when rows are token-padded (see ``TP.tdm``); otherwise
@@ -244,7 +261,8 @@ def vit_tdm_layer(cfg: ModelConfig, params: Dict, packed: Dict,
     if r_t is None:
         r_t = cfg.pruning.r_t
     x, scores = _encoder_attn(cfg, params, packed, x, layer,
-                              collect_scores=True, n_valid=n_valid)
+                              collect_scores=True, n_valid=n_valid,
+                              precision=precision)
     x, _ = TP.tdm(x, scores, r_t, has_cls=True, k=k)
     return _encoder_mlp(cfg, params, x, layer)
 
@@ -252,7 +270,8 @@ def vit_tdm_layer(cfg: ModelConfig, params: Dict, packed: Dict,
 def vit_tdm_soft_layer(cfg: ModelConfig, params: Dict, packed: Dict,
                        x: jax.Array, layer: int, k: int,
                        pkg_mass: Optional[jax.Array] = None,
-                       n_valid: Optional[jax.Array] = None
+                       n_valid: Optional[jax.Array] = None,
+                       precision: str = "fp32"
                        ) -> Tuple[jax.Array, jax.Array]:
     """Soft-pruning variant of :func:`vit_tdm_layer`: the dropped tokens
     fold into a persistent package token (``TP.tdm_soft``). Same output
@@ -262,7 +281,8 @@ def vit_tdm_soft_layer(cfg: ModelConfig, params: Dict, packed: Dict,
     at its own valid-token boundary (body index ``n_valid - 2``) so
     token-padded tiles pin the right row."""
     x, scores = _encoder_attn(cfg, params, packed, x, layer,
-                              collect_scores=True, n_valid=n_valid)
+                              collect_scores=True, n_valid=n_valid,
+                              precision=precision)
     pkg_pos = None
     if pkg_mass is not None and n_valid is not None:
         pkg_pos = jnp.asarray(n_valid, jnp.int32) - 2
@@ -280,7 +300,8 @@ def vit_head(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
 
 def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
                     x: jax.Array, steps: Tuple[Tuple, ...],
-                    pkg_mass: Optional[jax.Array] = None) -> jax.Array:
+                    pkg_mass: Optional[jax.Array] = None,
+                    precision: str = "fp32") -> jax.Array:
     """Compose consecutive segments into ONE program: ``steps`` is a static
     tuple of ``(segment, k)`` pairs — or ``(segment, k, soft)`` triples for
     soft-pruning TDM steps (``k`` only for TDM segments). This is the
@@ -289,7 +310,9 @@ def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
     ``n_valid`` is ever needed. All shapes are static given the entry shape
     and the ``k`` sequence. ``pkg_mass`` seeds the package mass for a lane
     entered AFTER a soft request's first TDM already ran tiled (``None``
-    otherwise); the mass threads through in-program across soft steps."""
+    otherwise); the mass threads through in-program across soft steps.
+    ``precision`` applies to the encoder steps only — embed and head run
+    fp32 regardless, matching the tiled path's segment rule."""
     for step in steps:
         seg, k = step[0], step[1]
         soft = bool(step[2]) if len(step) > 2 else False
@@ -297,16 +320,19 @@ def run_fused_steps(cfg: ModelConfig, params: Dict, packed: Dict,
         if kind == "embed":
             x = vit_embed(cfg, params, x)
         elif kind == "layers":
-            x = vit_layers(cfg, params, packed, x, seg[1], seg[2])
+            x = vit_layers(cfg, params, packed, x, seg[1], seg[2],
+                           precision=precision)
         elif kind == "tdm":
             if k is None:
                 raise ValueError("fused tdm steps need an explicit static k")
             if soft:
                 x, pkg_mass = vit_tdm_soft_layer(cfg, params, packed, x,
                                                  seg[1], k=k,
-                                                 pkg_mass=pkg_mass)
+                                                 pkg_mass=pkg_mass,
+                                                 precision=precision)
             else:
-                x = vit_tdm_layer(cfg, params, packed, x, seg[1], k=k)
+                x = vit_tdm_layer(cfg, params, packed, x, seg[1], k=k,
+                                  precision=precision)
                 pkg_mass = None  # a hard TDM drops/keeps the package like
                 #                  any token; its mass is meaningless after
         elif kind == "head":
@@ -349,7 +375,8 @@ def forward_vit_packed(cfg: ModelConfig, params: Dict,
                        use_tdm: bool | None = None,
                        segments: "Optional[PackedVitSegments]" = None,
                        schedule: Optional[Sequence[float]] = None,
-                       soft: bool = False) -> M.Output:
+                       soft: bool = False,
+                       precision: str = "fp32") -> M.Output:
     """ViT forward with attention projections executed via the SBMM kernel
     (interpret mode on CPU; native Pallas on TPU backends).
 
@@ -370,7 +397,9 @@ def forward_vit_packed(cfg: ModelConfig, params: Dict,
     ``schedule`` is a per-TDM-segment keep schedule (``None`` broadcasts
     ``cfg.pruning.r_t``) and ``soft`` selects the package-token soft TDM —
     together the offline oracle for the serving engine's quality-elastic
-    and soft-pruning paths."""
+    and soft-pruning paths. ``precision`` runs the encoder segments
+    through the quantized weight set + kernels (``repro.core.quant``) —
+    the single-request oracle for the engine's quantized tiles."""
     runner = segments if segments is not None else _cached_segments(
         cfg, params, packed, use_tdm)
     if schedule is None:
@@ -385,16 +414,17 @@ def forward_vit_packed(cfg: ModelConfig, params: Dict,
             if soft:
                 k = tdm_soft_keep_count(n, r, has_pkg=ordinal > 0)
                 x, pkg_mass = runner.run(seg, x, k=k, soft=True,
-                                         pkg_mass=pkg_mass)
+                                         pkg_mass=pkg_mass,
+                                         precision=precision)
             else:
                 k = tdm_keep_count(n, r)
-                x = runner.run(seg, x, k=k)
+                x = runner.run(seg, x, k=k, precision=precision)
             n = k + 2
             ordinal += 1
         elif seg[0] == "head":
             return M.Output(runner.run(seg, x))
         else:
-            x = runner.run(seg, x)
+            x = runner.run(seg, x, precision=precision)
     raise AssertionError("vit_segments plan must end with ('head',)")
 
 
@@ -424,12 +454,24 @@ class PackedVitSegments:
     def __init__(self, cfg: ModelConfig, params: Dict,
                  packed: Dict[str, packing.PackedWeight],
                  use_tdm: Optional[bool] = None,
-                 donate_activations: bool = False):
+                 donate_activations: bool = False,
+                 quant_granularity: str = "channel"):
         self.cfg = cfg
         self.params = params
         self.packed = packed
         self.plan = vit_segments(cfg, use_tdm)
         self.donate_activations = donate_activations
+        if quant_granularity not in Q.GRANULARITIES:
+            raise ValueError(
+                f"quant_granularity must be one of {Q.GRANULARITIES}, "
+                f"got {quant_granularity!r}")
+        self.quant_granularity = quant_granularity
+        # Quantized packed dicts are derived lazily on first use — an
+        # fp32-only engine never pays the quantization pass, and precisions
+        # share the one params tree (embed/MLP/head weights are
+        # precision-independent: only the SBMM-packed attention weights
+        # re-quantize).
+        self._packed_by: Dict[str, Dict] = {"fp32": packed}
         # Only the "layers" segment preserves the activation shape
         # [B, n, D] input->output, so only its input tile is donatable
         # (embed/tdm/head change shapes — donating them would just warn
@@ -442,80 +484,121 @@ class PackedVitSegments:
         self._embed = jax.jit(
             lambda params, patches: vit_embed(cfg, params, patches))
         self._layers = jax.jit(
-            lambda params, packed, x, n_valid, lo, hi: vit_layers(
-                cfg, params, packed, x, lo, hi, n_valid=n_valid),
-            static_argnames=("lo", "hi"), **don)
+            lambda params, packed, x, n_valid, lo, hi, prec: vit_layers(
+                cfg, params, packed, x, lo, hi, n_valid=n_valid,
+                precision=prec),
+            static_argnames=("lo", "hi", "prec"), **don)
         self._tdm = jax.jit(
-            lambda params, packed, x, n_valid, layer, k: vit_tdm_layer(
-                cfg, params, packed, x, layer, k=k, n_valid=n_valid),
-            static_argnames=("layer", "k"))
+            lambda params, packed, x, n_valid, layer, k, prec: vit_tdm_layer(
+                cfg, params, packed, x, layer, k=k, n_valid=n_valid,
+                precision=prec),
+            static_argnames=("layer", "k", "prec"))
         self._tdm_soft = jax.jit(
-            lambda params, packed, x, n_valid, pkg_mass, layer, k:
+            lambda params, packed, x, n_valid, pkg_mass, layer, k, prec:
             vit_tdm_soft_layer(cfg, params, packed, x, layer, k=k,
-                               pkg_mass=pkg_mass, n_valid=n_valid),
-            static_argnames=("layer", "k"))
+                               pkg_mass=pkg_mass, n_valid=n_valid,
+                               precision=prec),
+            static_argnames=("layer", "k", "prec"))
         self._head = jax.jit(lambda params, x: vit_head(cfg, params, x))
         self._fused = jax.jit(
-            lambda params, packed, x, pkg_mass, steps: run_fused_steps(
-                cfg, params, packed, x, steps, pkg_mass=pkg_mass),
-            static_argnames=("steps",))
+            lambda params, packed, x, pkg_mass, steps, prec: run_fused_steps(
+                cfg, params, packed, x, steps, pkg_mass=pkg_mass,
+                precision=prec),
+            static_argnames=("steps", "prec"))
         self._compiled: set = set()
         self._fused_trajectories: set = set()
+
+    def packed_for(self, precision: str) -> Dict:
+        """The packed dict at ``precision`` — quantized lazily on first use
+        (``fp32`` is the original dict; ``fp16``/``int8`` derive from it
+        via :func:`repro.core.quant.quantize_packed_dict` at this runner's
+        ``quant_granularity``) and memoized so every tile/lane at a given
+        precision shares one set of device buffers."""
+        if precision not in Q.PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {Q.PRECISIONS}, "
+                f"got {precision!r}")
+        pk = self._packed_by.get(precision)
+        if pk is None:
+            pk = Q.quantize_packed_dict(self.packed, precision,
+                                        self.quant_granularity)
+            self._packed_by[precision] = pk
+        return pk
+
+    def _ledger_key(self, base: Tuple, precision: str) -> Tuple:
+        # fp32 keys stay byte-identical to the pre-quantization ledger so
+        # fp32 compile counts / digests are unchanged; other precisions
+        # append a marker (soft-marker ordering preserved: soft, then
+        # precision).
+        return base if precision == "fp32" else base + (precision,)
 
     def run(self, seg: Segment, x: jax.Array,
             n_valid: Optional[np.ndarray] = None,
             k: Optional[int] = None, soft: bool = False,
-            pkg_mass: Optional[jax.Array] = None):
+            pkg_mass: Optional[jax.Array] = None,
+            precision: str = "fp32"):
         """Execute one segment on a dense tile ``x``. ``n_valid`` ([B]) is
         required whenever rows are token-padded; ``k`` is required for
         ``tdm`` segments (uniform across the tile by batcher construction).
         ``soft`` selects the package-token TDM variant: the call takes the
         tile's accumulated package masses (``None`` before the first TDM)
-        and returns ``(y, new_mass)`` instead of ``y``.
+        and returns ``(y, new_mass)`` instead of ``y``. ``precision``
+        selects the quantized weight set + kernels for the encoder
+        segments; embed and head ignore it (always fp32, so those tiles
+        are shared across precisions and never recompile).
         """
         kind = seg[0]
         nv = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
-        self._compiled.add((seg, tuple(x.shape), nv is not None, k,
-                            "soft") if soft else
-                           (seg, tuple(x.shape), nv is not None, k))
+        base = ((seg, tuple(x.shape), nv is not None, k, "soft") if soft
+                else (seg, tuple(x.shape), nv is not None, k))
         if kind == "embed":
+            self._compiled.add(base)
             return self._embed(self.params, x)
         if kind == "layers":
-            return self._layers(self.params, self.packed, x, nv,
-                                lo=seg[1], hi=seg[2])
+            self._compiled.add(self._ledger_key(base, precision))
+            return self._layers(self.params, self.packed_for(precision),
+                                x, nv, lo=seg[1], hi=seg[2], prec=precision)
         if kind == "tdm":
             if k is None:
                 raise ValueError("tdm segments need an explicit static k "
                                  "(per-request keep count)")
+            self._compiled.add(self._ledger_key(base, precision))
             if soft:
-                return self._tdm_soft(self.params, self.packed, x, nv,
-                                      pkg_mass, layer=seg[1], k=k)
-            return self._tdm(self.params, self.packed, x, nv,
-                             layer=seg[1], k=k)
+                return self._tdm_soft(self.params,
+                                      self.packed_for(precision), x, nv,
+                                      pkg_mass, layer=seg[1], k=k,
+                                      prec=precision)
+            return self._tdm(self.params, self.packed_for(precision), x, nv,
+                             layer=seg[1], k=k, prec=precision)
         if kind == "head":
+            self._compiled.add(base)
             return self._head(self.params, x)
         raise ValueError(f"unknown segment {seg!r}")
 
     def run_fused(self, steps: Tuple[Tuple, ...], x: jax.Array,
-                  pkg_mass: Optional[jax.Array] = None) -> jax.Array:
+                  pkg_mass: Optional[jax.Array] = None,
+                  precision: str = "fp32") -> jax.Array:
         """Express lane: execute ``steps`` — consecutive ``(segment, k)``
         pairs, or ``(segment, k, soft)`` triples for soft TDM steps — as
         ONE jitted trajectory program (one dispatch for the whole remaining
         forward of a bucket-singleton request). ``pkg_mass`` ([1]) seeds
         the package mass when the lane starts after a soft request's first
-        TDM. Compiles once per distinct (steps, entry shape); the
-        per-trajectory ledger is ``fused_trajectory_count`` and its keys
-        bound the extra jit entries beyond the tile bucket set."""
+        TDM. Compiles once per distinct (steps, entry shape, precision);
+        the per-trajectory ledger is ``fused_trajectory_count`` and its
+        keys bound the extra jit entries beyond the tile bucket set."""
         steps = tuple(
             (tuple(s[0]), None if s[1] is None else int(s[1]))
             + ((True,) if len(s) > 2 and s[2] else ())
             for s in steps)
         if not steps:
             raise ValueError("fused run needs at least one step")
-        self._fused_trajectories.add((steps, tuple(x.shape)))
-        self._compiled.add((("fused",) + steps, tuple(x.shape), False, None))
-        return self._fused(self.params, self.packed, jnp.asarray(x),
-                           pkg_mass, steps=steps)
+        traj_key = self._ledger_key((steps, tuple(x.shape)), precision)
+        self._fused_trajectories.add(traj_key)
+        self._compiled.add(self._ledger_key(
+            (("fused",) + steps, tuple(x.shape), False, None), precision))
+        return self._fused(self.params, self.packed_for(precision),
+                           jnp.asarray(x), pkg_mass, steps=steps,
+                           prec=precision)
 
     # -- compile observability ---------------------------------------------
     @property

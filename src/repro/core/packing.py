@@ -53,10 +53,14 @@ class PackedWeight:
         return self.blocks.shape[1]
 
     def nbytes(self) -> int:
-        """Model-size contribution: stored blocks + headers (paper metric)."""
+        """Model-size contribution: stored blocks + headers (paper metric),
+        each at its actual dtype width — fp16-quantized blocks halve the
+        block term; the header term follows the header dtype rather than
+        assuming 4 bytes."""
         kept = int(np.asarray(self.counts).sum())
         b = self.block_size
-        return kept * b * b * self.blocks.dtype.itemsize + kept * 4
+        return (kept * b * b * self.blocks.dtype.itemsize
+                + kept * self.header.dtype.itemsize)
 
     def to_dense(self) -> jnp.ndarray:
         """Reconstruct the (masked) dense weight — the packing oracle."""
@@ -154,16 +158,28 @@ def pack_weight(w: np.ndarray, block_mask: np.ndarray, block_size: int,
 
 
 def packed_model_size_bytes(masks_and_weights, block_size: int,
-                            dtype_bytes: int = 2) -> int:
+                            dtype_bytes: int = 2,
+                            header_bytes: int = 4,
+                            scale_bytes: int = 0,
+                            scales_per_block: int = 1) -> int:
     """Aggregate paper-style model size: only surviving blocks + headers for
     pruned tensors, full size for dense tensors.
 
-    ``masks_and_weights``: iterable of (w_shape, block_mask or None)."""
+    ``masks_and_weights``: iterable of (w_shape, block_mask or None).
+    ``dtype_bytes`` is the stored element width (2 = the paper's int16
+    weights; 4/2/1 for the serving fp32/fp16/int8 precisions —
+    ``repro.core.quant.PRECISION_BYTES``); ``header_bytes`` the per-kept-
+    block index width; ``scale_bytes`` (× ``scales_per_block`` per kept
+    block, e.g. ``block_size`` for per-output-channel scales) accounts for
+    quantization scales, so the model-size columns stay honest across
+    precisions."""
     total = 0
+    per_block_meta = header_bytes + scale_bytes * scales_per_block
     for w_shape, mask in masks_and_weights:
         if mask is None:
             total += int(np.prod(w_shape)) * dtype_bytes
         else:
             kept = int(np.asarray(mask).sum())
-            total += kept * block_size * block_size * dtype_bytes + kept * 4
+            total += (kept * block_size * block_size * dtype_bytes
+                      + kept * per_block_meta)
     return total

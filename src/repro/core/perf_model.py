@@ -36,6 +36,23 @@ class AcceleratorConfig:
 
 PAPER_U250 = AcceleratorConfig()
 
+# Precision throughput multipliers for the modeled PE array: halving the
+# operand width doubles the MACs each p_pe² cell packs per cycle (the
+# classic DSP-packing argument on FPGAs; on the MXU, int8/fp16 tiles hit
+# the higher-throughput systolic modes). Deliberately coarse — the planner
+# only needs the ORDERING (int8 < fp16 < fp32) and a stable ratio;
+# ``TileCostModel.calibrate`` owns the absolute scale.
+PRECISION_SPEEDUP = {"fp32": 1.0, "fp16": 2.0, "int8": 4.0}
+
+
+def precision_speedup(precision: str) -> float:
+    try:
+        return PRECISION_SPEEDUP[precision]
+    except KeyError:
+        raise ValueError(
+            f"precision must be one of {tuple(PRECISION_SPEEDUP)}, "
+            f"got {precision!r}") from None
+
 
 # TPU v5e roofline constants (per chip) — §Roofline hardware terms.
 TPU_PEAK_FLOPS = 197e12      # bf16
@@ -123,25 +140,31 @@ def encoder_cycles(N: int, cfg: ModelConfig, p: PruningConfig,
 
 def vit_segment_cycles(cfg: ModelConfig, seg, n_tokens: int,
                        acc: AcceleratorConfig = PAPER_U250,
-                       mode: str = "pipelined") -> float:
+                       mode: str = "pipelined",
+                       precision: str = "fp32") -> float:
     """Cycles for ONE image row of a ``core.packed_runner`` segment at a
     (padded) token count of ``n_tokens`` — the per-stage pricing the
     serving ``TileCostModel`` uses to trade padding against dispatches
     (merge decisions) and to estimate remaining work (deadline slack).
     Segment forms: ``("embed",) | ("layers", lo, hi) | ("tdm", i) |
-    ("head",)``."""
+    ("head",)``. ``precision`` scales the encoder-segment cost by the PE
+    array's narrower-operand throughput (``PRECISION_SPEEDUP``); embed and
+    head always run fp32 in the serving path, so only the weight-bearing
+    ``layers``/``tdm`` segments get the discount."""
     p = cfg.pruning
     kind = seg[0]
+    speed = precision_speedup(precision)
     if kind == "embed":
         pdim = cfg.patch_size ** 2 * 3
         return float(sbmm_cycles(n_tokens, pdim, cfg.d_model, 1,
                                  p.block_size, acc, mode=mode))
     if kind == "layers":
         return float((seg[2] - seg[1]) * encoder_cycles(
-            n_tokens, cfg, p, acc, has_tdm=False, mode=mode)["total"])
+            n_tokens, cfg, p, acc, has_tdm=False, mode=mode)["total"]
+            / speed)
     if kind == "tdm":
         return float(encoder_cycles(n_tokens, cfg, p, acc, has_tdm=True,
-                                    mode=mode)["total"])
+                                    mode=mode)["total"] / speed)
     if kind == "head":
         return float(sbmm_cycles(1, cfg.d_model, cfg.num_classes, 1,
                                  p.block_size, acc, mode=mode)

@@ -1,4 +1,5 @@
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_fp16)
 from repro.kernels.flash_attention.ref import attention_ref
 
-__all__ = ["flash_attention", "attention_ref"]
+__all__ = ["flash_attention", "flash_attention_fp16", "attention_ref"]

@@ -55,3 +55,20 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     overrides) — resolved outside the jit so it is a static argument."""
     return _flash_attention_jit(q, k, v, causal, q_offset, tq, tk, bounded,
                                 resolve_interpret(interpret))
+
+
+def flash_attention_fp16(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True, q_offset: int = 0,
+                         tq: int = 128, tk: int = 128, bounded: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    """Half-precision variant of :func:`flash_attention` for the quantized
+    serving path: operands are quantized to float16 before the kernel (the
+    whole precision loss — the kernel's softmax statistics and output
+    accumulation stay fp32 in-register), output returned as fp32. The cast
+    here IS the quantizer, so the jnp oracle for this variant is exactly
+    ``flash_attention_jnp`` on the same fp16-cast operands."""
+    out = flash_attention(q.astype(jnp.float16), k.astype(jnp.float16),
+                          v.astype(jnp.float16), causal=causal,
+                          q_offset=q_offset, tq=tq, tk=tk, bounded=bounded,
+                          interpret=interpret)
+    return out.astype(jnp.float32)

@@ -1,4 +1,6 @@
-from repro.kernels.sbmm.ops import sbmm, sbmm_raw
+from repro.kernels.sbmm.ops import sbmm, sbmm_quant_raw, sbmm_raw
+from repro.kernels.sbmm.quant import sbmm_quant_pallas, sbmm_quant_ref
 from repro.kernels.sbmm.ref import sbmm_ref
 
-__all__ = ["sbmm", "sbmm_raw", "sbmm_ref"]
+__all__ = ["sbmm", "sbmm_raw", "sbmm_ref",
+           "sbmm_quant_raw", "sbmm_quant_pallas", "sbmm_quant_ref"]

@@ -1,0 +1,121 @@
+"""Dequant-in-kernel SBMM — int8 gathered blocks × float activations.
+
+Same grid/BlockSpec structure as the fp32 kernel (``sbmm.py``): one
+(row-strip, block-column) cell per grid step, header-driven gather of
+activation sub-tiles, fp32 accumulation. The difference is the weight
+stream: blocks arrive as int8 and are dequantized in registers right
+before the MXU — ``w = q.astype(f32) * scale`` — with the scales riding
+scalar prefetch next to the header (the same PrefetchScalarGridSpec
+pattern ``kernels.token_package`` uses for its per-row metadata). Per-block
+scales multiply the whole b×b block; per-output-channel scales ([C, S, b])
+broadcast over the block's output columns.
+
+``sbmm_quant_ref`` is the jnp dequant oracle, written to mirror the
+kernel's per-column accumulation order exactly so interpret-mode runs
+bit-match it (tests assert ``array_equal``, not atol).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
+
+
+def _sbmm_quant_kernel(header_ref, scales_ref, x_ref, blocks_ref, y_ref, *,
+                       block_size: int, max_kept: int, tm: int,
+                       per_channel: bool):
+    """One (row-strip, block-column) grid cell with in-register dequant.
+
+    header_ref : [n_cols, max_kept] int32 (scalar prefetch)
+    scales_ref : [n_cols, max_kept] or [n_cols, max_kept, b] f32 (prefetch)
+    x_ref      : [TM, K]   activation strip (VMEM)
+    blocks_ref : [1, max_kept, b, b] int8 gathered blocks for this column
+    y_ref      : [TM, b]   output tile
+    """
+    j = pl.program_id(1)
+    b = block_size
+
+    def body(s, acc):
+        idx = header_ref[j, s]
+        safe = jnp.maximum(idx, 0)
+        x_blk = x_ref[:, pl.dslice(safe * b, b)]           # [TM, b] gather
+        w_q = blocks_ref[0, s].astype(jnp.float32)         # [b, b]
+        if per_channel:
+            w_blk = w_q * scales_ref[j, s, :][None, :]     # per out-column
+        else:
+            w_blk = w_q * scales_ref[j, s]
+        contrib = jnp.dot(x_blk.astype(jnp.float32), w_blk,
+                          preferred_element_type=jnp.float32)
+        return acc + jnp.where(idx >= 0, contrib, 0.0)
+
+    acc = jax.lax.fori_loop(
+        0, max_kept, body, jnp.zeros((tm, b), jnp.float32))
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def sbmm_quant_pallas(x: jax.Array, blocks: jax.Array, header: jax.Array,
+                      scales: jax.Array, *, tm: int = 128,
+                      interpret: "bool | None" = None) -> jax.Array:
+    """x: [M, K]; blocks: [C, S, b, b] int8; header: [C, S] int32;
+    scales: [C, S] or [C, S, b] f32. Returns y: [M, C·b] in x.dtype.
+
+    ``M`` must be a multiple of ``tm`` (ops.py pads). Header AND scales go
+    through scalar prefetch (``num_scalar_prefetch=2``), so the dequant
+    constant is resident before the column's blocks stream in."""
+    interpret = resolve_interpret(interpret)
+    M, K = x.shape
+    C, S, b, _ = blocks.shape
+    assert M % tm == 0, (M, tm)
+    per_channel = scales.ndim == 3
+
+    grid = (M // tm, C)
+    kernel = functools.partial(_sbmm_quant_kernel, block_size=b, max_kept=S,
+                               tm=tm, per_channel=per_channel)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, K), lambda i, j, hdr, scl: (i, 0)),
+                pl.BlockSpec((1, S, b, b),
+                             lambda i, j, hdr, scl: (j, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tm, b), lambda i, j, hdr, scl: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, C * b), x.dtype),
+        interpret=interpret,
+    )(header, scales, x, blocks)
+
+
+def sbmm_quant_ref(x: jnp.ndarray, blocks: jnp.ndarray, header: jnp.ndarray,
+                   scales: jnp.ndarray) -> jnp.ndarray:
+    """jnp dequant oracle, accumulation-order-matched to the kernel: per
+    block-column, walk kept slots in header order, dequantize the block,
+    matmul the gathered activation sub-tile in f32, and sum in slot order —
+    bit-identical to an interpret-mode kernel run."""
+    M, K = x.shape
+    C, S, b, _ = blocks.shape
+    hdr = np.asarray(header)
+    scl = np.asarray(scales, np.float32)
+    per_channel = scl.ndim == 3
+    x32 = jnp.asarray(x, jnp.float32)
+    cols = []
+    for c in range(C):
+        acc = jnp.zeros((M, b), jnp.float32)
+        for s in range(S):
+            r = int(hdr[c, s])
+            if r < 0:
+                continue  # adds exactly 0.0 in the kernel — bit-neutral
+            w_q = jnp.asarray(blocks[c, s], jnp.float32)
+            w = w_q * (scl[c, s][None, :] if per_channel else scl[c, s])
+            acc = acc + jnp.dot(x32[:, r * b:(r + 1) * b], w,
+                                preferred_element_type=jnp.float32)
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=1).astype(x.dtype)

@@ -92,8 +92,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
           arrival_spread: int = 4, seed: int = 0,
           planner: str = "full", deadline_ms: float = 0.0,
           pipeline_depth: int = 1, quality: str = "strict",
-          keep_floor: float = 0.4, trace_out: str = "",
-          metrics_out: str = ""):
+          keep_floor: float = 0.4, precision: str = "fp32",
+          trace_out: str = "", metrics_out: str = ""):
     cfg = get_config(arch).reduced()
     if image_size:
         cfg = cfg.replace(image_size=image_size)
@@ -105,7 +105,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
     vc = VisionEngineConfig(max_batch=slots, mode=mode,
                             token_tile=token_tile, planner=planner,
                             pipeline_depth=pipeline_depth,
-                            quality=quality, keep_floor=keep_floor)
+                            quality=quality, keep_floor=keep_floor,
+                            precision=precision)
     tracer = Tracer() if trace_out else None
     engine = VisionEngine.from_pruned(cfg, params, scores, vc=vc,
                                       policy=policy, tracer=tracer)
@@ -121,7 +122,8 @@ def serve(arch: str = "deit-small", num_requests: int = 16, slots: int = 4,
     return {"outputs": out, "seconds": dt,
             "images_per_s": len(out) / dt,
             "events": list(engine.events),
-            "stats": engine.stats()}
+            "stats": engine.stats(),
+            "quantization": engine.quantization_report()}
 
 
 def main():
@@ -162,6 +164,13 @@ def main():
     ap.add_argument("--keep-floor", type=float, default=0.4,
                     help="controller keep-rate floor: no request is ever "
                          "tightened below this, whatever the load")
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "fp16", "int8"),
+                    help="serving precision tier: fp32 = bit-exact "
+                         "reference; fp16/int8 let the planner price each "
+                         "request's trajectory at the tier and dispatch "
+                         "the dequant-in-kernel variants when strictly "
+                         "cheaper (quality=strict requests stay fp32)")
     ap.add_argument("--trace-out", default="", metavar="PATH",
                     help="write a Chrome trace_event JSON (Perfetto-"
                          "loadable) of the run's plan/stage/dispatch/"
@@ -176,8 +185,8 @@ def main():
                 args.token_tile, args.policy, args.image_size,
                 args.arrival_spread, args.seed, args.planner,
                 args.deadline_ms, args.pipeline_depth, args.quality,
-                args.keep_floor, trace_out=args.trace_out,
-                metrics_out=args.metrics_out)
+                args.keep_floor, precision=args.precision,
+                trace_out=args.trace_out, metrics_out=args.metrics_out)
     if args.json:
         print(json.dumps({
             "top1": {str(u): int(np.argmax(lg))
@@ -195,6 +204,16 @@ def main():
               f"jit_compiles={st['jit_compile_count']} <= "
               f"buckets+trajectories={st['compile_budget']}")
         print(plan_stats_line(st))
+        q = out["quantization"]
+        print(f"precision={st['precision']} "
+              f"(granularity={q['granularity']}) "
+              f"quant_error={q['quant_max_abs_error']:.5f} "
+              f"packed_bytes={q['packed_bytes_fp32']} -> "
+              f"{q['packed_bytes']} "
+              f"dispatches=" + "/".join(
+                  f"{p}:{st[f'dispatch_{p}']}"
+                  for p in ("fp32", "fp16", "int8")) +
+              f" dequant={st['dequant_dispatches']}")
         if st["quality_mode"] != "strict":
             print(f"quality={st['quality_mode']} "
                   f"floor={st['quality_keep_floor']} tightened="

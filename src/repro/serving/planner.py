@@ -46,14 +46,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
-from repro.core.perf_model import (PAPER_U250, AcceleratorConfig,
+from repro.core.perf_model import (PAPER_U250, PRECISION_SPEEDUP,
+                                   AcceleratorConfig, precision_speedup,
                                    vit_segment_cycles)
 from repro.serving.ragged_batcher import RaggedBatcher, Tile
 
-__all__ = ["PLANNER_MODES", "PlanItem", "FusedLane", "PlanStats",
-           "ExecutionPlan", "TileCostModel", "TilePlanner"]
+__all__ = ["PLANNER_MODES", "PRECISIONS", "PlanItem", "FusedLane",
+           "PlanStats", "ExecutionPlan", "TileCostModel", "TilePlanner"]
 
 PLANNER_MODES = ("off", "merge", "fuse", "full")
+
+# Precision candidates in tie-break order: fp32 first, so a quantized tier
+# must be STRICTLY cheaper under the cost model to displace full precision.
+PRECISIONS = tuple(PRECISION_SPEEDUP)
 
 # FPGA-era default: roughly the cost of streaming one column-block group
 # through the MPCA between kernels (~3 µs at 300 MHz). Deliberately coarse —
@@ -205,23 +210,43 @@ class TileCostModel:
     @staticmethod
     def _segment_of(stage) -> Optional[Tuple]:
         """Extract the packed_runner segment from an engine stage key
-        ``(seg_idx, segment, k)`` — or the soft-pruning variant
-        ``(seg_idx, segment, k, "soft")`` (same segment weights, so the
-        same pricing); None for opaque keys."""
-        if (isinstance(stage, tuple) and len(stage) in (3, 4)
+        ``(seg_idx, segment, k)`` — or its marker-extended variants
+        ``(…, "soft")`` / ``(…, precision)`` / ``(…, "soft", precision)``
+        (same segment weights, so the same base pricing); None for opaque
+        keys."""
+        if (isinstance(stage, tuple) and len(stage) >= 3
                 and isinstance(stage[1], tuple) and stage[1]
                 and isinstance(stage[1][0], str)):
             return stage[1]
         return None
 
+    @staticmethod
+    def _precision_of(stage) -> str:
+        """Precision marker of a stage key: non-fp32 stages carry the
+        precision string as their LAST element (after the optional "soft"
+        marker); fp32 keys carry no marker — by construction in the engine,
+        so fp32 stage keys (and therefore fp32 plans, digests and compile
+        ledgers) are byte-identical to the pre-quantization ones."""
+        if (isinstance(stage, tuple) and stage
+                and isinstance(stage[-1], str)
+                and stage[-1] in PRECISION_SPEEDUP):
+            return stage[-1]
+        return "fp32"
+
     def stage_row_cycles(self, stage, n_tokens: int) -> float:
         """Modeled cycles for ONE row (one image) of a tile at ``stage``
-        with ``n_tokens`` (padded) tokens."""
+        with ``n_tokens`` (padded) tokens. Quantized stages price at the
+        cycle model's precision throughput (``PRECISION_SPEEDUP``)."""
         seg = self._segment_of(stage)
+        precision = self._precision_of(stage)
         if seg is None or self.cfg is None:
-            # opaque stage: attention-shaped proxy (quadratic term + linear)
-            return float(n_tokens * n_tokens + 8 * n_tokens)
-        return vit_segment_cycles(self.cfg, seg, n_tokens, self.acc)
+            # opaque stage: attention-shaped proxy (quadratic term + linear),
+            # scaled by the same precision speedup so foreign engines and
+            # the proxy-priced benches see consistent precision ordering
+            return (float(n_tokens * n_tokens + 8 * n_tokens)
+                    / precision_speedup(precision))
+        return vit_segment_cycles(self.cfg, seg, n_tokens, self.acc,
+                                  precision=precision)
 
     # -- tile / lane / trajectory pricing ----------------------------------
     def tile_work_cycles(self, tile: Tile) -> float:
@@ -336,6 +361,7 @@ class TilePlanner:
         self.modeled_cycles = 0.0
         self.base_cycles = 0.0
         self.trajectory_keys: Set = set()
+        self.precision_decisions: Dict[str, int] = {p: 0 for p in PRECISIONS}
 
     # -- public API --------------------------------------------------------
     def plan(self, items: Sequence[PlanItem]) -> ExecutionPlan:
@@ -414,6 +440,34 @@ class TilePlanner:
         self.batcher.record(plan.tiles)
         return plan
 
+    def choose_precision(self, candidates: Sequence[Tuple[str, Tuple]],
+                         record: bool = True) -> str:
+        """Pick the execution precision for one request — the third planner
+        knob next to merging and quality. ``candidates`` is a sequence of
+        ``(precision, trajectory)`` pairs, each trajectory already carrying
+        that precision's stage-key markers (so it prices through the same
+        :meth:`TileCostModel.trajectory_cycles` every other decision uses).
+
+        Deterministic: the strict argmin of modeled trajectory cycles,
+        scanning candidates in the given order — engines list fp32 first,
+        so a quantized tier only wins by being STRICTLY cheaper, and ties
+        keep full precision. ``record=False`` skips the decision counters
+        for pure pricing probes (``modeled_request_ms``/backlog estimates),
+        so ``precision_decisions`` counts actual admissions only."""
+        cands = list(candidates)
+        if not cands:
+            raise ValueError("choose_precision needs at least one candidate")
+        best_p: Optional[str] = None
+        best_c: Optional[float] = None
+        for p, traj in cands:
+            c = self.cost_model.trajectory_cycles(traj)
+            if best_c is None or c < best_c:
+                best_p, best_c = p, c
+        if record:
+            self.precision_decisions[best_p] = (
+                self.precision_decisions.get(best_p, 0) + 1)
+        return best_p
+
     def advance_items(self, items: Sequence[PlanItem],
                       plan: ExecutionPlan) -> List[PlanItem]:
         """Predicted next-step population after ``plan`` runs over
@@ -483,7 +537,7 @@ class TilePlanner:
         ``stats()`` under ``plan_*``)."""
         cm = self.cost_model
         saving = self.base_cycles - self.modeled_cycles
-        return {
+        out = {
             "mode": self.mode,
             "plans": self.plans,
             "merges": self.merges,
@@ -499,6 +553,9 @@ class TilePlanner:
             "modeled_saving_ms": cm.ms(saving),
             "calibrated": cm.calibrated,
         }
+        for p in PRECISIONS:
+            out[f"precision_{p}"] = self.precision_decisions.get(p, 0)
+        return out
 
     @property
     def trajectory_count(self) -> int:

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packed_runner as PR
+from repro.core import quant as Q
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.planner import (PLANNER_MODES, PlanItem, TileCostModel,
@@ -114,8 +115,23 @@ class VisionEngineConfig:
     # quantized keep-rate grid the controller resolves onto (bounds the
     # distinct TDM k values, hence recompiles)
     keep_floor: float = 0.4   # no request is ever tightened below this
+    precision: str = "fp32"   # serving precision tier: "fp32" is the
+    # bit-exact reference path; "fp16"/"int8" make that tier available to
+    # the planner, which prices each request's trajectory at both fp32 and
+    # the tier and picks the cheaper (fp32 ties win). Requests with
+    # quality="strict" are always pinned to fp32. Encoder segments only —
+    # embed and head run fp32 at every tier.
+    quant_granularity: str = "channel"  # int8 scale granularity:
+    # "block" = one scale per kept block, "channel" = per output channel
 
     def __post_init__(self):
+        if self.precision not in Q.PRECISIONS:
+            raise ValueError(f"VisionEngineConfig.precision must be one of "
+                             f"{Q.PRECISIONS}, got {self.precision!r}")
+        if self.quant_granularity not in Q.GRANULARITIES:
+            raise ValueError(f"VisionEngineConfig.quant_granularity must be "
+                             f"one of {Q.GRANULARITIES}, "
+                             f"got {self.quant_granularity!r}")
         if self.max_batch <= 0:
             raise ValueError(f"VisionEngineConfig.max_batch must be a "
                              f"positive slot count, got {self.max_batch}")
@@ -158,6 +174,9 @@ class _Live:
     pkg_mass: Any = None  # accumulated package mass (0-d device array)
     # after the first soft TDM; updated at dispatch like x/n_tokens
     admit_t: float = 0.0  # monotonic admission time (deadline slack base)
+    precision: str = "fp32"  # execution precision chosen at admission
+    # (planner-priced; "strict" quality pins fp32) — static per request so
+    # its stage keys, and therefore its tiles, stay precision-uniform
 
 
 class VisionEngine:
@@ -179,9 +198,10 @@ class VisionEngine:
         # the engine stages a fresh padded batch per tile and never
         # re-reads a dispatched one, so layers tiles can donate their
         # input buffers to the output allocation
-        self.segments = PR.PackedVitSegments(cfg, params, packed,
-                                             use_tdm=self.vc.use_tdm,
-                                             donate_activations=True)
+        self.segments = PR.PackedVitSegments(
+            cfg, params, packed, use_tdm=self.vc.use_tdm,
+            donate_activations=True,
+            quant_granularity=self.vc.quant_granularity)
         self.scheduler = Scheduler(self.vc.max_batch, policy=policy)
         self.batcher = RaggedBatcher(token_tile=self.vc.token_tile,
                                      mode=self.vc.mode,
@@ -214,6 +234,12 @@ class VisionEngine:
         self.plan_ahead_drops = 0
         self.steps = 0
         self.images_served = 0
+        # quantization observability: tiles+lanes dispatched per precision,
+        # and how many of those went through the dequant-in-kernel int8
+        # SBMM path (counted at the dispatch phase, like planner.commit)
+        self.precision_dispatches: Dict[str, int] = {
+            p: 0 for p in Q.PRECISIONS}
+        self.dequant_dispatches = 0
         self._n_patches_max = (cfg.image_size // cfg.patch_size) ** 2
         self._use_tdm = (cfg.pruning.token_pruning_enabled
                          if self.vc.use_tdm is None else self.vc.use_tdm)
@@ -290,8 +316,8 @@ class VisionEngine:
                     # consumes slack, so urgency RISES while queued.
                     cm = self.planner.cost_model
                     r.solo_ms = cm.ms(cm.trajectory_cycles(
-                        self._traj_from(0, r.n_patches, sched,
-                                        r.soft_prune)))
+                        self._traj_from(0, r.n_patches, sched, r.soft_prune,
+                                        precision=self._precision_for(r))))
                     r.prune_load *= min(1.0, r.deadline_ms
                                         / max(r.solo_ms, 1e-9))
             self._pending.append((base + r.arrival_step, r))
@@ -366,7 +392,8 @@ class VisionEngine:
                  else self._base_schedule(r))
         cm = self.planner.cost_model
         return cm.ms(cm.trajectory_cycles(
-            self._traj_from(0, r.n_patches, sched, r.soft_prune)))
+            self._traj_from(0, r.n_patches, sched, r.soft_prune,
+                            precision=self._precision_for(r))))
 
     def modeled_backlog_ms(self) -> float:
         """Modeled time to drain the engine's current commitment: the
@@ -377,7 +404,8 @@ class VisionEngine:
         ms = sum(self.modeled_request_ms(r) for r in self.scheduler.waiting)
         for st in self._live.values():
             ms += cm.ms(cm.trajectory_cycles(self._traj_from(
-                st.seg_idx, st.n_tokens, st.schedule, st.soft)))
+                st.seg_idx, st.n_tokens, st.schedule, st.soft,
+                precision=st.precision)))
         return ms
 
     def stats(self) -> Dict[str, Any]:
@@ -395,6 +423,13 @@ class VisionEngine:
             "compile_budget": buckets + trajectories,
             "plan_ahead_hits": self.plan_ahead_hits,
             "plan_ahead_drops": self.plan_ahead_drops,
+            # quantized-serving counters: the engine tier, tile+lane
+            # dispatches per execution precision, and how many dispatches
+            # ran the dequant-in-kernel int8 SBMM
+            "precision": self.vc.precision,
+            **{f"dispatch_{p}": n
+               for p, n in self.precision_dispatches.items()},
+            "dequant_dispatches": self.dequant_dispatches,
             **{f"sched_{k}": v for k, v in self.scheduler.stats().items()},
             **{f"pipeline_{k}": v for k, v in self.pipeline.stats().items()},
             **{f"batcher_{k}": v for k, v in self.batcher.stats().items()},
@@ -411,7 +446,9 @@ class VisionEngine:
         device idle, backlog), plus the signals the flat dicts cannot
         carry — the modeled-vs-measured plan cost error (calibration
         drift) and the quality controller's tighten count per keep
-        level."""
+        level. The quantization counters (``dispatch_<precision>``,
+        ``dequant_dispatches``, the planner's ``plan_precision_*``
+        decisions) ride the absorb like every other numeric stat."""
         registry.absorb(prefix, self.stats())
         p = self.pipeline.stats()
         registry.gauge(f"{prefix}.plan_cost_error").set(p["cost_error"])
@@ -419,6 +456,26 @@ class VisionEngine:
             registry.gauge(
                 f"{prefix}.quality_tightened_level_{lvl:g}").set(n)
         return registry
+
+    def quantization_report(self) -> Dict[str, Any]:
+        """Weight-quantization accounting at the engine's precision tier:
+        the max-abs weight delta vs the fp32 packed dict (the launcher's
+        quantization-error stat) and the packed model size at both tiers
+        (``PackedWeight.nbytes`` semantics — surviving blocks + headers +
+        scales, at actual dtype widths). fp32 engines report a zero error
+        without ever building a quantized dict."""
+        fp32_bytes = Q.packed_dict_nbytes(self.segments.packed)
+        rep = {"precision": self.vc.precision,
+               "granularity": self.vc.quant_granularity,
+               "packed_bytes_fp32": fp32_bytes,
+               "packed_bytes": fp32_bytes,
+               "quant_max_abs_error": 0.0}
+        if self.vc.precision != "fp32":
+            qd = self.segments.packed_for(self.vc.precision)
+            rep["packed_bytes"] = Q.packed_dict_nbytes(qd)
+            rep["quant_max_abs_error"] = Q.max_abs_error(
+                self.segments.packed, qd)
+        return rep
 
     # -- engine internals --------------------------------------------------
     def _validate(self, r: VisionRequest) -> None:
@@ -477,7 +534,26 @@ class VisionEngine:
                 n_tokens=req.n_patches,
                 schedule=self._base_schedule(req),
                 soft=req.soft_prune,
-                admit_t=time.monotonic())
+                admit_t=time.monotonic(),
+                precision=self._precision_for(req, record=True))
+
+    def _precision_for(self, r: VisionRequest, record: bool = False) -> str:
+        """Execution precision for ``r`` — the planner's third knob. fp32
+        engines short-circuit (no planner call, no counters: the fp32 path
+        stays byte-identical to the pre-quantization engine), and
+        quality="strict" requests pin fp32 on any engine. Otherwise the
+        planner prices the request's full trajectory at fp32 AND at the
+        engine tier and takes the strict argmin (fp32 listed first, so
+        ties keep full precision). ``record=True`` only at admission —
+        pricing probes (modeled_request_ms / backlog) must not inflate the
+        decision counters."""
+        if self.vc.precision == "fp32" or r.quality == "strict":
+            return "fp32"
+        sched = self._base_schedule(r)
+        cands = [(p, self._traj_from(0, r.n_patches, sched, r.soft_prune,
+                                     precision=p))
+                 for p in ("fp32", self.vc.precision)]
+        return self.planner.choose_precision(cands, record=record)
 
     def _base_schedule(self, r: VisionRequest) -> Tuple[float, ...]:
         """The request's own per-TDM keep schedule BEFORE any controller
@@ -501,7 +577,8 @@ class VisionEngine:
                 1.0, max(left, 0.0) / max(req.solo_ms, 1e-9))
 
     def _traj_from(self, seg_idx: int, n_tokens: int,
-                   schedule: Sequence[float], soft: bool = False):
+                   schedule: Sequence[float], soft: bool = False,
+                   precision: str = "fp32"):
         """Remaining (stage key, entry token count) trajectory from segment
         ``seg_idx`` at ``n_tokens`` real tokens under ``schedule`` (full
         per-TDM keep schedule; entries before this point are history —
@@ -512,8 +589,16 @@ class VisionEngine:
         TDM stages append a ``"soft"`` marker (different kernel, and the
         package row makes padded-batch membership semantics different), so
         soft and hard requests never share a TDM tile while non-TDM
-        segments still batch together. Offsets align with engine steps,
-        which is what the planner's fusion and deadline logic rely on."""
+        segments still batch together. Non-fp32 ``precision`` appends the
+        precision string to the weight-bearing (layers/tdm) stage keys
+        (after the soft marker) — different weights and kernels, so
+        precisions never share an encoder tile and the cost model prices
+        them at their own throughput; embed/head keys stay unmarked (those
+        tiles run fp32 at every tier and batch across precisions), and
+        fp32 keys are byte-identical to the pre-quantization ones. Offsets
+        align with engine steps, which is what the planner's fusion and
+        deadline logic rely on."""
+        mark = () if precision == "fp32" else (precision,)
         entries = []
         n = n_tokens
         ti = self._tdm_before[seg_idx]
@@ -523,12 +608,14 @@ class VisionEngine:
                 r = schedule[ti]
                 if soft:
                     k = PR.tdm_soft_keep_count(n, r, has_pkg=ti > 0)
-                    entries.append(((si, seg, k, "soft"), n))
+                    entries.append(((si, seg, k, "soft") + mark, n))
                 else:
                     k = PR.tdm_keep_count(n, r)
-                    entries.append(((si, seg, k), n))
+                    entries.append(((si, seg, k) + mark, n))
                 n = k + 2
                 ti += 1
+            elif seg[0] == "layers":
+                entries.append(((si, seg, None) + mark, n))
             else:
                 entries.append(((si, seg, None), n))
                 if seg[0] == "embed":
@@ -552,7 +639,8 @@ class VisionEngine:
 
             def rem(sched, _st=st, _cm=cm):
                 return _cm.ms(_cm.trajectory_cycles(self._traj_from(
-                    _st.seg_idx, _st.n_tokens, sched, _st.soft)))
+                    _st.seg_idx, _st.n_tokens, sched, _st.soft,
+                    precision=_st.precision)))
 
         # backlog pressure comes from the Scheduler's first-class counter —
         # the same number its stats() block (and the traffic harness) report
@@ -563,13 +651,27 @@ class VisionEngine:
 
     def _plan_item(self, st: _Live, now: float,
                    schedule: Sequence[float]) -> PlanItem:
-        traj = self._traj_from(st.seg_idx, st.n_tokens, schedule, st.soft)
+        traj = self._traj_from(st.seg_idx, st.n_tokens, schedule, st.soft,
+                               precision=st.precision)
         left = None
         if st.req.deadline_ms is not None:
             left = st.req.deadline_ms - (now - st.admit_t) * 1e3
         return PlanItem(stage=traj[0][0], n_tokens=st.n_tokens,
                         cap=self._token_cap(st), trajectory=traj,
                         deadline_left_ms=left)
+
+    @staticmethod
+    def _parse_stage(stage) -> Tuple[Tuple, Optional[int], bool, str]:
+        """Decompose an engine stage key into ``(segment, k, soft,
+        precision)`` — the inverse of ``_traj_from``'s key construction:
+        ``(si, segment, k[, "soft"][, precision])`` with both trailing
+        markers optional ("soft" is not a precision string, so membership
+        in ``Q.PRECISIONS`` disambiguates)."""
+        seg, k = stage[1], stage[2]
+        rest = stage[3:]
+        soft = "soft" in rest
+        precision = next((m for m in rest if m in Q.PRECISIONS), "fp32")
+        return seg, k, soft, precision
 
     def _token_cap(self, st: _Live) -> Optional[int]:
         """Hard bound on the padded token tile: the embed stage indexes the
@@ -681,9 +783,9 @@ class VisionEngine:
             member_slots = [slots[i] for i in tile.members]
             states = [self._live[s] for s in member_slots]
             # the tile's stage key is the source of truth for what runs:
-            # (si, segment, k[, "soft"]) — states[0] only supplies data
-            seg, k = tile.stage[1], tile.stage[2]
-            soft = len(tile.stage) > 3
+            # (si, segment, k[, "soft"][, precision]) — states[0] only
+            # supplies data
+            seg, k, soft, prec = self._parse_stage(tile.stage)
             # token/batch padding is exactness-neutral; building the batch
             # from device handles (pad + stack) keeps staging async — the
             # old host-side scatter would block on the previous step
@@ -711,16 +813,18 @@ class VisionEngine:
                      for st in states]
                     + [jnp.zeros((), jnp.float32)]
                     * (tile.b_tile - len(states)))
-            tile_runs.append((tile, member_slots, seg, k, soft, batch,
+            tile_runs.append((tile, member_slots, seg, k, soft, prec, batch,
                               n_valid, pkg_mass))
 
         lane_runs = []
         for lane in plan.lanes:
             slot = slots[lane.member]
             st = self._live[slot]
-            steps = tuple((stage[1], stage[2]) if len(stage) == 3
-                          else (stage[1], stage[2], True)
-                          for stage, _ in lane.trajectory)
+            steps = []
+            for stage, _ in lane.trajectory:
+                seg, k, soft, _prec = self._parse_stage(stage)
+                steps.append((seg, k, True) if soft else (seg, k))
+            steps = tuple(steps)
             seed = None
             if st.pkg_mass is not None:
                 seed = jnp.asarray(st.pkg_mass, jnp.float32).reshape(1)
@@ -733,14 +837,20 @@ class VisionEngine:
         produced: List[Any] = []  # (req, y handle, row) head/lane outputs
 
         def run_tile(tr):
-            tile, member_slots, seg, k, soft, batch, n_valid, pkg_mass = tr
+            (tile, member_slots, seg, k, soft, prec, batch, n_valid,
+             pkg_mass) = tr
+            self.precision_dispatches[prec] += 1
+            if prec == "int8":
+                self.dequant_dispatches += 1
             mass = None
             if soft:
                 y, mass = self.segments.run(seg, batch, n_valid=n_valid,
                                             k=k, soft=True,
-                                            pkg_mass=pkg_mass)
+                                            pkg_mass=pkg_mass,
+                                            precision=prec)
             else:
-                y = self.segments.run(seg, batch, n_valid=n_valid, k=k)
+                y = self.segments.run(seg, batch, n_valid=n_valid, k=k,
+                                      precision=prec)
             kind = seg[0]
             for b, slot in enumerate(member_slots):
                 st = self._live[slot]
@@ -767,7 +877,11 @@ class VisionEngine:
             handles = [run_tile(tr) for tr in tile_runs[:n_urgent]]
             for slot, steps, x1, seed in lane_runs:
                 st = self._live[slot]
-                y = self.segments.run_fused(steps, x1, pkg_mass=seed)
+                self.precision_dispatches[st.precision] += 1
+                if st.precision == "int8":
+                    self.dequant_dispatches += 1
+                y = self.segments.run_fused(steps, x1, pkg_mass=seed,
+                                            precision=st.precision)
                 produced.append((st.req, y, 0))
                 st.seg_idx = n_segs
                 handles.append(y)
